@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.stats import summarize
+
+
+def table(rows: list[dict], title: str) -> None:
+    if not rows:
+        print(f"== {title} == (no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(f"\n== {title} ==")
+    print(" | ".join(f"{c:>14s}" for c in cols))
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                cells.append(f"{v:14.4g}")
+            else:
+                cells.append(f"{str(v):>14s}")
+        print(" | ".join(cells))
+
+
+def latency_row(name: str, xs, extra: dict | None = None) -> dict:
+    s = summarize(np.asarray(xs, float))
+    row = {
+        "name": name,
+        "mean_ms": s.mean * 1e3,
+        "range_ms": s.range * 1e3,
+        "range_over_mean_pct": s.range_over_mean_pct,
+        "cv": s.cv,
+        "p50_ms": s.p50 * 1e3,
+        "p99_ms": s.p99 * 1e3,
+    }
+    if extra:
+        row.update(extra)
+    return row
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"CSV,{name},{us_per_call:.2f},{derived}")

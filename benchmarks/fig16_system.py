@@ -1,0 +1,108 @@
+"""Paper §V + Figs. 15-17: the end-to-end perception graph.
+
+Camera → {detector, segmentation(lane), slam-proxy} over the pub/sub broker
+(simulated transport delays + REAL pipeline compute), fused by the
+approximate-time synchronizer.  Claims: (a) total delay ≫ total inference
+for bus-fed modules, (b) running modules concurrently inflates tails vs
+isolated runs, (c) a larger synchronizer queue damps fusion-delay variance.
+"""
+import numpy as np
+
+from repro.bus import Broker, CopyTransport
+from repro.core.stats import coefficient_of_variation as cv, summarize, tail_ratio
+from repro.perception import ApproxTimeSynchronizer, SceneConfig
+from repro.perception.pipelines import run_lane, run_one_stage
+from repro.sched import SimConfig, StageSpec, TaskSpec, simulate
+from .common import csv_line, table
+
+MB = 1024 * 1024
+N_FRAMES = 200
+PERIOD = 0.1
+
+
+def _module_latency_models():
+    """Per-module (mean, jitter, proposal-scaled?) from the real pipelines,
+    measured once, then replayed through the contention simulator."""
+    one = run_one_stage(SceneConfig("city", seed=12), n=16).end_to_end_series()
+    lane = run_lane(SceneConfig("city", seed=12), n=16).end_to_end_series()
+    return {
+        "detector": (float(np.mean(one)), float(np.std(one) / np.mean(one))),
+        "segmentation": (float(np.mean(lane)), float(np.std(lane) / np.mean(lane))),
+        "slam": (0.012, 0.25),
+    }
+
+
+def run() -> list[dict]:
+    mods = _module_latency_models()
+    rows = []
+
+    # --- isolated vs concurrent execution (contention over 2 host cores)
+    def tasks(concurrent: bool, which: str):
+        ts = []
+        for name, (mean, jit) in mods.items():
+            if not concurrent and name != which:
+                continue
+            ts.append(TaskSpec(name, PERIOD, (
+                StageSpec("pre", "cpu", 0.15 * mean, 0.1),
+                StageSpec("infer", "accel", 0.55 * mean, max(jit, 0.05)),
+                StageSpec("post", "cpu", 0.30 * mean, max(jit, 0.05)),
+            ), n_jobs=N_FRAMES))
+        return ts
+
+    iso, conc = {}, {}
+    for name in mods:
+        r = simulate(tasks(False, name), SimConfig(cpu_cores=2, seed=1))
+        iso[name] = r.latencies[name]
+    r = simulate(tasks(True, ""), SimConfig(cpu_cores=2, seed=1))
+    for name in mods:
+        conc[name] = r.latencies[name]
+
+    broker = Broker(transport=CopyTransport(), seed=0)
+    # image topic latency (6.2MB to 3 subscribers) adds the paper's I/O term
+    img_delay = broker.transport.latencies(
+        __import__("repro.bus", fromlist=["Message"]).Message("img", int(6.2 * MB)),
+        3, broker.rng,
+    )
+
+    for name in mods:
+        i, c = iso[name], conc[name]
+        rows.append({
+            "module": name,
+            "iso_mean_ms": i.mean() * 1e3, "iso_cv": cv(i),
+            "conc_mean_ms": c.mean() * 1e3, "conc_cv": cv(c),
+            "conc_p99_ms": float(np.percentile(c, 99)) * 1e3,
+            "tail99_ratio": tail_ratio(c),
+        })
+        csv_line(f"fig16/{name}", rows[-1]["conc_mean_ms"] * 1e3,
+                 f"iso_cv={rows[-1]['iso_cv']:.3f},conc_cv={rows[-1]['conc_cv']:.3f}")
+    table(rows, "Fig. 15/16 analogue — isolated vs concurrent modules")
+
+    # --- fusion delay vs queue size (Fig. 17)
+    frows = []
+    rng = np.random.default_rng(3)
+    for q in (100, 1000):
+        sync = ApproxTimeSynchronizer(list(mods), queue_size=q, slop=PERIOD)
+        for i in range(N_FRAMES):
+            stamp = i * PERIOD
+            for j, name in enumerate(mods):
+                lat = conc[name][i % len(conc[name])] + float(img_delay[j])
+                # bursty middleware stalls (the paper's 10s worst case)
+                if rng.random() < 0.02:
+                    lat += rng.uniform(0.5, 2.0)
+                sync.add(name, stamp, None, now=stamp + lat)
+        d = np.array(sync.delays())
+        frows.append({
+            "queue_size": q, "events": len(d),
+            "mean_ms": d.mean() * 1e3,
+            "p99_ms": float(np.percentile(d, 99)) * 1e3,
+            "max_ms": d.max() * 1e3,
+            "cv": cv(d),
+        })
+        csv_line(f"fig17/queue_{q}", frows[-1]["mean_ms"] * 1e3,
+                 f"cv={frows[-1]['cv']:.3f}")
+    table(frows, "Fig. 17 analogue — fusion delay vs synchronizer queue")
+    return rows + frows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""§Perf hillclimb harness: run roofline analysis for a named variant of an
+(arch × shape) pair and print the three terms — the measure step of the
+hypothesis → change → measure → validate loop (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.perf_iter yi-6b decode_32k \
+        --variant baseline
+    PYTHONPATH=src python -m benchmarks.perf_iter internvl2-1b train_4k \
+        --variant pure_dp
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.distributed.sharding import default_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import V5E, analyze_extrapolated
+
+# variant name → (cfg_overrides, rules_fn(cfg, mesh) or None, kwargs)
+def _pure_dp_rules(cfg, mesh):
+    """Small models on a fixed pod mesh: give up TP entirely — batch shards
+    over BOTH mesh axes, weights fully replicated."""
+    return default_rules(cfg, mesh).with_overrides(
+        batch=("data", "model"), heads=None, kv_heads=None,
+        mlp=None, vocab=None, expert=None,
+    )
+
+
+VARIANTS = {
+    "baseline": ({}, None, {}),
+    # triangular chunk schedule: visit only causal/window-allowed KV chunks
+    "tri_attn": ({"causal_chunk_skip": True, "attn_chunk_q": 512,
+                  "attn_chunk_kv": 1024}, None, {}),
+    # pure data parallelism over all 256 chips (small models)
+    "pure_dp": ({}, _pure_dp_rules, {}),
+    "pure_dp_tri": ({"causal_chunk_skip": True, "attn_chunk_q": 512,
+                     "attn_chunk_kv": 1024}, _pure_dp_rules, {}),
+    # MoE dispatch-group sweep
+    "moe_g256": ({"moe_group_size": 256}, None, {}),
+    "moe_g1024": ({"moe_group_size": 1024}, None, {}),
+    # gradient accumulation sweep (train shapes)
+    "accum2": ({}, None, {"grad_accum": 2}),
+    "accum4": ({}, None, {"grad_accum": 4}),
+    "accum16": ({}, None, {"grad_accum": 16}),
+    # no FSDP (measure the all-gather cost it adds)
+    "no_fsdp": ({}, None, {"fsdp": False}),
+    # ablation: without the microbatch sharding constraint (GSPMD splits the
+    # data axis across the scanned accumulation dim — §Perf finding)
+    "no_micro_pin": ({}, None, {"pin_microbatch": False}),
+    # attention chunk geometry
+    "chunk_1k_2k": ({"attn_chunk_q": 1024, "attn_chunk_kv": 2048}, None, {}),
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, out_path: str | None = None):
+    overrides, rules_fn, kwargs = VARIANTS[variant]
+    mesh = make_production_mesh()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    rules = rules_fn(cfg, mesh) if rules_fn else None
+    rep = analyze_extrapolated(
+        arch, shape, mesh, V5E, cfg_overrides=overrides or None,
+        rules=rules, **kwargs,
+    )
+    rec = rep.as_row()
+    rec["variant"] = variant
+    rec["collectives"] = rep.collectives
+    print(f"[{variant}] {rep.bound_summary()}")
+    for op, v in sorted(rep.collectives.items(), key=lambda kv: -kv[1]["bytes"]):
+        print(f"    {op:20s} count={v['count']:8.1f} bytes={v['bytes']/1e9:8.3f} GB")
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="perf_iters.jsonl")
+    args = ap.parse_args()
+    run_variant(args.arch, args.shape, args.variant, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§Roofline: the per-(arch × shape) roofline table from the dry-run
+artifacts (reads results_single*.jsonl produced by repro.launch.dryrun)."""
+import json
+import os
+
+from .common import table
+
+CANDIDATES = ("results_single_fixed.jsonl", "results_single.jsonl")
+
+
+def run() -> list[dict]:
+    path = next((p for p in CANDIDATES if os.path.exists(p)), None)
+    if path is None:
+        print("roofline: no dry-run results found — run "
+              "`python -m repro.launch.dryrun --all --mesh single --out results_single.jsonl`")
+        return []
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"])] = r     # last record wins
+    rows = []
+    for (arch, shape), r in sorted(seen.items()):
+        if r["status"] != "ok":
+            rows.append({"arch": arch, "shape": shape, "status": r["status"],
+                         "dominant": r.get("reason", r.get("error", ""))[:40],
+                         "compute_ms": "", "memory_ms": "", "collective_ms": "",
+                         "useful": "", "hbm_fit": ""})
+            continue
+        ma = r.get("memory_analysis", {})
+        occupancy = (ma.get("argument_size_in_bytes", 0)
+                     + ma.get("temp_size_in_bytes", 0)
+                     + ma.get("output_size_in_bytes", 0)
+                     - ma.get("alias_size_in_bytes", 0)) / 16e9
+        rows.append({
+            "arch": arch, "shape": shape, "status": "ok",
+            "dominant": r["dominant"],
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "useful": r["useful_fraction"],
+            "hbm_fit": f"{occupancy:.0%}" if ma else "?",
+        })
+    table(rows, f"§Roofline baseline table ({path})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §7).
+
+Prints each benchmark's table plus ``CSV,name,us_per_call,derived`` lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table1_zoo",
+    "fig4_scenarios",
+    "fig5_object_correlation",
+    "fig6_pixels",
+    "table4_rain",
+    "fig9_bus",
+    "table6_breakdown",
+    "table8_sched",
+    "fig13_hardware",
+    "fig16_system",
+    "static_fix",
+    "roofline",
+]
+
+
+def main() -> int:
+    import importlib
+
+    only = sys.argv[1:] or MODULES
+    failures = []
+    for name in only:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        print(f"\n######## {name} ########", flush=True)
+        try:
+            mod.run()
+            print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        return 1
+    print("\nAll benchmarks completed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

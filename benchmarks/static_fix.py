@@ -1,0 +1,49 @@
+"""Beyond-paper artifact: the static-shape mitigation quantified.
+
+Same scenes, same backbone: dynamic host post-processing (paper-faithful
+pathology) vs static-shape device post-processing (ours) — report the c_v /
+range / tail reduction for detection and lane pipelines.
+"""
+from repro.core.variance import variance_reduction
+from repro.perception import SceneConfig, run_lane, run_lane_static, run_one_stage, run_two_stage
+from .common import csv_line, table
+
+N = 30
+
+
+def run() -> list[dict]:
+    cfg = SceneConfig("city", seed=10)
+    rows = []
+    for name, dyn_fn, sta_fn in [
+        ("detection", run_two_stage, run_one_stage),
+        ("lane", run_lane, run_lane_static),
+    ]:
+        dyn = dyn_fn(cfg, n=N)
+        sta = sta_fn(cfg, n=N)
+        rep = variance_reduction(
+            dyn.stage_series("post_processing"), sta.stage_series("post_processing")
+        )
+        rep_e2e = variance_reduction(dyn.end_to_end_series(), sta.end_to_end_series())
+        import numpy as np
+        dyn_post = dyn.stage_series("post_processing")
+        sta_post = sta.stage_series("post_processing")
+        rows.append({
+            "pipeline": name,
+            # σ and range are the variance-elimination evidence; cv of the
+            # static path is relative jitter of a ~µs readback (misleading)
+            "post_sigma_ms_dyn": float(np.std(dyn_post)) * 1e3,
+            "post_sigma_ms_static": float(np.std(sta_post)) * 1e3,
+            "post_range_ms_dyn": rep["range_before"] * 1e3,
+            "post_range_ms_static": rep["range_after"] * 1e3,
+            "e2e_cv_dynamic": rep_e2e["cv_before"],
+            "e2e_cv_static": rep_e2e["cv_after"],
+        })
+        csv_line(f"static_fix/{name}", 0.0,
+                 f"post_sigma_ms {rows[-1]['post_sigma_ms_dyn']:.3f}"
+                 f"->{rows[-1]['post_sigma_ms_static']:.3f}")
+    table(rows, "Static-shape mitigation — variance elimination (ours)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

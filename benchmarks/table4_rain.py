@@ -1,0 +1,32 @@
+"""Paper Table IV + Fig. 7: rain level vs inference time mean/σ/c_v and
+proposal counts (rain ↑ ⇒ proposals ↓ ⇒ mean & variance ↓)."""
+import numpy as np
+
+from repro.perception import SceneConfig, run_lane, run_two_stage
+from .common import csv_line, table
+
+N = 20
+RAIN = (0, 25, 50, 100, 150, 200)
+
+
+def run() -> list[dict]:
+    rows = []
+    for model, fn in [("two_stage", run_two_stage), ("lane", run_lane)]:
+        for rain in RAIN:
+            rec = fn(SceneConfig("city", seed=6, rain_mm_per_hour=rain), n=N)
+            xs = rec.end_to_end_series()
+            rows.append({
+                "model": model, "rain_mm_h": rain,
+                "mean_ms": xs.mean() * 1e3,
+                "sigma_ms": xs.std() * 1e3,
+                "cv": xs.std() / xs.mean(),
+                "mean_proposals": float(rec.meta_series("num_proposals").mean()),
+            })
+        csv_line(f"table4/{model}", rows[-1]["mean_ms"] * 1e3,
+                 f"proposals_at_200mm={rows[-1]['mean_proposals']:.1f}")
+    table(rows, "Table IV analogue — rain vs latency & proposals")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

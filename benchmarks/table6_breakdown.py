@@ -1,0 +1,27 @@
+"""Paper Table VI + Fig. 10: correlation of end-to-end latency with each
+stage (read / pre / inference / post) — classifies pipelines into
+inference-dominated vs post-processing-dominated."""
+from repro.core.variance import classify, decompose
+from repro.perception import SceneConfig, run_lane, run_lane_static, run_one_stage, run_two_stage
+from .common import csv_line, table
+
+N = 30
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, fn in [("one_stage", run_one_stage), ("two_stage", run_two_stage),
+                     ("lane", run_lane), ("lane_static", run_lane_static)]:
+        rec = fn(SceneConfig("city", seed=8), n=N)
+        row = {"model": name}
+        for st in rec.stages():
+            row[f"corr_{st}"] = rec.correlation_with_end_to_end(st)
+        row["class"] = classify(rec, threshold=0.35)
+        rows.append(row)
+        csv_line(f"table6/{name}", 0.0, row["class"])
+    table(rows, "Table VI analogue — stage correlations & dominance class")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""End-to-end perception serving demo (paper §IV): camera → three modules
+over the pub/sub broker → approximate-time fusion, with the full variance
+report — then the same system with the static-shape pipelines, showing the
+mitigation.
+
+    PYTHONPATH=src python examples/serve_perception.py --frames 40
+"""
+import argparse
+
+import numpy as np
+
+from repro.bus import Broker, CopyTransport, Message
+from repro.core.stats import summarize
+from repro.perception import (
+    ApproxTimeSynchronizer,
+    SceneConfig,
+    run_lane,
+    run_lane_static,
+    run_one_stage,
+    run_two_stage,
+)
+
+MB = 1024 * 1024
+
+
+def drive(frames: int, static: bool, queue: int) -> dict:
+    det = (run_one_stage if static else run_two_stage)(SceneConfig("city", seed=1), n=frames)
+    lane = (run_lane_static if static else run_lane)(SceneConfig("city", seed=2), n=frames)
+    det_lat = det.end_to_end_series()
+    lane_lat = lane.end_to_end_series()
+
+    broker = Broker(transport=CopyTransport(), seed=0)
+    sync = ApproxTimeSynchronizer(["det", "lane", "slam"], queue_size=queue, slop=0.1)
+    rng = np.random.default_rng(0)
+    period = 0.1
+    for i in range(frames):
+        stamp = i * period
+        bus = broker.transport.latencies(Message("img", int(6.2 * MB)), 3, broker.rng)
+        sync.add("det", stamp, None, now=stamp + det_lat[i % len(det_lat)] + bus[0])
+        sync.add("lane", stamp, None, now=stamp + lane_lat[i % len(lane_lat)] + bus[1])
+        sync.add("slam", stamp, None, now=stamp + 0.012 * rng.lognormal(0, 0.25) + bus[2])
+    d = np.array(sync.delays())
+    return {
+        "det": summarize(det_lat),
+        "lane": summarize(lane_lat),
+        "fusion": summarize(d) if d.size else None,
+        "events": len(d),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--queue", type=int, default=100)
+    args = ap.parse_args()
+
+    for static in (False, True):
+        label = "STATIC (ours)" if static else "DYNAMIC (paper-faithful)"
+        rep = drive(args.frames, static, args.queue)
+        print(f"\n=== {label} ===")
+        for k in ("det", "lane", "fusion"):
+            s = rep[k]
+            if s is None:
+                continue
+            print(f"  {k:>7s}: mean={s.mean*1e3:7.2f}ms cv={s.cv:.3f} "
+                  f"range={s.range*1e3:7.2f}ms p99={s.p99*1e3:7.2f}ms")
+        print(f"  fusion events: {rep['events']}")
+
+
+if __name__ == "__main__":
+    main()

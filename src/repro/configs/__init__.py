@@ -1,0 +1,14 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from .base import ModelConfig, reduced_for_smoke
+from .registry import ARCHS, SHAPES, InputShape, get_config, input_specs, shape_applicability
+
+__all__ = [
+    "ModelConfig",
+    "reduced_for_smoke",
+    "ARCHS",
+    "SHAPES",
+    "InputShape",
+    "get_config",
+    "input_specs",
+    "shape_applicability",
+]

@@ -1,0 +1,61 @@
+"""Core contribution: latency-variation instrumentation and analysis.
+
+The paper's artifact is an *analysis methodology*; this package makes it a
+library: record per-stage timelines (`timing`), summarize variation
+(`stats`), attribute variance to stages (`variance`), select deadlines
+(`deadline`), and predict latency online (`predictor`).
+"""
+from .stats import (
+    LatencySummary,
+    Welford,
+    bootstrap_ci,
+    coefficient_of_variation,
+    latency_range,
+    pearson,
+    summarize,
+    tail_ratio,
+)
+from .timing import StageRecord, StageTimer, TimelineRecorder, run_pipeline
+from .variance import VarianceDecomposition, classify, decompose, variance_reduction
+from .deadline import (
+    DeadlinePolicy,
+    DeadlineReport,
+    DynamicDeadline,
+    KalmanDeadline,
+    MeanDeadline,
+    PercentileDeadline,
+    WorstObserved,
+    evaluate,
+)
+from .predictor import FeaturePredictor, GaussianPredictor, KalmanPredictor, Prediction
+
+__all__ = [
+    "LatencySummary",
+    "Welford",
+    "bootstrap_ci",
+    "coefficient_of_variation",
+    "latency_range",
+    "pearson",
+    "summarize",
+    "tail_ratio",
+    "StageRecord",
+    "StageTimer",
+    "TimelineRecorder",
+    "run_pipeline",
+    "VarianceDecomposition",
+    "classify",
+    "decompose",
+    "variance_reduction",
+    "DeadlinePolicy",
+    "DeadlineReport",
+    "DynamicDeadline",
+    "KalmanDeadline",
+    "MeanDeadline",
+    "PercentileDeadline",
+    "WorstObserved",
+    "evaluate",
+    "FeaturePredictor",
+    "GaussianPredictor",
+    "KalmanPredictor",
+    "Prediction",
+]

@@ -1,0 +1,18 @@
+"""Distribution: logical-axis sharding rules and mesh-aware helpers."""
+from .sharding import (
+    Ruleset,
+    batch_specs,
+    decode_state_spec,
+    default_rules,
+    shard_params_spec,
+    specs_from_axes,
+)
+
+__all__ = [
+    "Ruleset",
+    "batch_specs",
+    "decode_state_spec",
+    "default_rules",
+    "shard_params_spec",
+    "specs_from_axes",
+]

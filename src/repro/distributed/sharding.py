@@ -1,0 +1,196 @@
+"""Logical-axis sharding: map model logical axes → mesh PartitionSpecs.
+
+Models annotate every parameter dimension with a logical name (``embed``,
+``heads``, ``mlp``, ``expert``, ``vocab``, ``layer``, …).  A ``Ruleset``
+maps those names onto physical mesh axes.  The default production ruleset
+(DESIGN.md §5):
+
+    batch    → ("pod", "data")    activations / token batches
+    heads    → "model"            attention heads (tensor parallel)
+    kv_heads → "model" iff num_kv_heads divides the model axis, else
+               replicated (MaxText convention for GQA/MQA deficits)
+    mlp      → "model"            FFN hidden
+    expert   → "model"            expert parallelism (token all-to-all)
+    vocab    → "model"            embedding/LM head
+    embed/layer/head_dim/state → replicated
+
+Every sharded dimension is divisibility-checked against the actual mesh
+axis sizes — a dimension that does not divide falls back to replication
+(never a compile error).  The ruleset is data, not code — §Perf iterations
+swap rulesets without touching model definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "Ruleset",
+    "default_rules",
+    "specs_from_axes",
+    "shard_params_spec",
+    "batch_specs",
+    "decode_state_spec",
+    "axis_size",
+]
+
+
+def axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in phys)
+    return mesh.shape[phys]
+
+
+@dataclasses.dataclass(frozen=True)
+class Ruleset:
+    """logical axis name → mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: tuple[tuple[str, Any], ...]
+
+    def lookup(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        for name, phys in self.rules:
+            if name == logical:
+                return phys
+        return None
+
+    def spec(self, axes: tuple) -> P:
+        return P(*(self.lookup(a) for a in axes))
+
+    def with_overrides(self, **overrides) -> "Ruleset":
+        d = dict(self.rules)
+        d.update(overrides)
+        return Ruleset(tuple(d.items()))
+
+
+def default_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False) -> Ruleset:
+    """The production ruleset for a (…, "data", "model") mesh.
+
+    ``fsdp=True`` additionally shards the ``embed`` dimension over the data
+    axes (fully-sharded data parallel; gradients reduce-scatter instead of
+    all-reduce) — a §Perf option for the very large dense models.
+    """
+    axis_names = mesh.axis_names
+    data_axes = tuple(a for a in axis_names if a in ("pod", "data"))
+    data = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    model = "model" if "model" in axis_names else None
+    msize = mesh.shape["model"] if model else 1
+
+    kv_heads = model if (model and cfg.num_kv_heads % msize == 0) else None
+    heads = model if (model and cfg.num_heads % msize == 0) else None
+    expert = model if (model and cfg.num_experts and cfg.num_experts % msize == 0) else None
+    # a PartitionSpec cannot use the same mesh axis twice: when experts shard
+    # over `model` (EP), the expert-FFN hidden dim must stay replicated
+    mlp = model if (model and cfg.d_ff % msize == 0 and expert is None) else None
+    vocab = model if (model and cfg.padded_vocab % msize == 0) else None
+    embed = None
+    if fsdp and data is not None and cfg.d_model % axis_size(mesh, data) == 0:
+        embed = data
+
+    rules = (
+        ("batch", data),
+        ("embed", embed),
+        ("heads", heads),
+        ("kv_heads", kv_heads),
+        ("head_dim", None),
+        ("mlp", mlp),
+        ("expert", expert),
+        ("vocab", vocab),
+        ("layer", None),
+        ("seq", None),
+        ("state", None),
+    )
+    return Ruleset(rules)
+
+
+def specs_from_axes(rules: Ruleset, axes_tree: Any) -> Any:
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def shard_params_spec(model, rules: Ruleset) -> Any:
+    """PartitionSpec pytree for a Model's parameters."""
+    return specs_from_axes(rules, model.axes())
+
+
+def _data_or_replicated(mesh: Mesh, rules: Ruleset, dim: int):
+    """The data sharding for a batch-like dim, or None if it doesn't divide
+    (e.g. long_500k's global_batch=1)."""
+    data = rules.lookup("batch")
+    if data is not None and dim % axis_size(mesh, data) == 0:
+        return data
+    # try a prefix of the data axes (e.g. just "pod")
+    if isinstance(data, tuple):
+        for cut in range(len(data) - 1, 0, -1):
+            sub = data[:cut]
+            if dim % axis_size(mesh, sub) == 0:
+                return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, rules: Ruleset, batch_tree: Mapping[str, Any]) -> Any:
+    """PartitionSpecs for a train/prefill/decode input batch: leading batch
+    dim on the data axes (when divisible), everything else replicated."""
+
+    def leaf_spec(leaf) -> P:
+        shp = tuple(leaf.shape)
+        if not shp:
+            return P()
+        data = _data_or_replicated(mesh, rules, shp[0])
+        return P(data, *([None] * (len(shp) - 1)))
+
+    return jax.tree.map(leaf_spec, batch_tree)
+
+
+def decode_state_spec(cfg: ModelConfig, mesh: Mesh, rules: Ruleset, state_shapes: Any) -> Any:
+    """PartitionSpecs for the decode state.
+
+    KV caches (L, B, C, K, D): batch on data, kv_heads on model (replicated
+    for MQA deficit).  SSM / RWKV recurrent states (L, B, H, P, N): batch
+    on data, heads on model when divisible.  Conv tails (L, B, w, d_inner):
+    channel dim on model.  Shift states (L, B, d): batch on data.
+    """
+    kv = rules.lookup("kv_heads")
+    model_ax = rules.lookup("mlp")
+    msize = axis_size(mesh, model_ax)
+
+    def dispatch(leaf) -> P:
+        shp = tuple(leaf.shape)
+        nd = len(shp)
+        if nd <= 1:
+            return P(*([None] * nd))
+        data = _data_or_replicated(mesh, rules, shp[1])
+        if nd == 5 and shp[-2] == cfg.num_kv_heads and shp[-1] == cfg.head_dim:
+            # KV cache (L, B, slots, K, D).  When kv_heads cannot shard over
+            # the model axis (GQA/MQA deficit), shard the *slots* dim instead
+            # — flash-decode semantics: XLA partitions the softmax over the
+            # sharded context with small all-reduces (max / sum / pv).
+            slots = None
+            if kv is None and model_ax is not None and shp[2] % msize == 0:
+                slots = model_ax
+            return P(None, data, slots, kv, None)
+        if nd == 5:
+            m = model_ax if (model_ax and shp[2] % msize == 0) else None
+            return P(None, data, m, None, None)                # SSM h / RWKV wkv
+        if nd == 4 and shp[-1] == cfg.d_inner:
+            m = model_ax if (model_ax and shp[-1] % msize == 0) else None
+            return P(None, data, None, m)                      # conv tail
+        if nd == 3:
+            return P(None, data, None)                         # shift states
+        return P(*([None] * nd))
+
+    return jax.tree.map(dispatch, state_shapes)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), plus the shared
+ops.py (jit'd wrappers) and ref.py (pure-jnp oracles).
+"""
+from .ops import decode_attention, flash_attention, mamba2_ssd, rwkv6_wkv
+
+__all__ = ["decode_attention", "flash_attention", "mamba2_ssd", "rwkv6_wkv"]

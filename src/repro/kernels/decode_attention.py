@@ -1,0 +1,119 @@
+"""Single-token decode attention — Pallas TPU kernel.
+
+One query token per sequence attends over a (possibly ring-buffer) KV
+cache.  Grid ``(batch, kv_head, cache_block)`` with the cache-block axis
+innermost: flash-decode style online softmax over cache blocks, carrying
+(m, l, acc) for the whole GQA group in VMEM scratch.  Slot validity comes
+from a positions vector (−1 = unwritten slot), exactly matching the model's
+ring-buffer semantics — masking is data-driven, the *shape* (and therefore
+the latency) is static: the paper's variance pathology cannot occur here.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    pos_ref, npos_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, ck: int, nk: int, window: Optional[int],
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (ck, D)
+    v = v_ref[0, 0].astype(jnp.float32)             # (ck, D)
+    kp = pos_ref[0]                                 # (ck,) slot positions
+    qp = npos_ref[0]                                # () current position
+
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, ck)
+    allow = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        allow &= kp > qp - window
+    s = jnp.where(allow[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * corr + p.sum(axis=1)
+    acc_new = acc_scr[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_kv", "interpret")
+)
+def decode_attention_fwd(
+    q: jax.Array,            # (B, H, D) one token per sequence
+    k_cache: jax.Array,      # (B, C, K, D)
+    v_cache: jax.Array,      # (B, C, K, D)
+    positions: jax.Array,    # (C,) absolute position per slot, -1 empty
+    next_pos: jax.Array,     # ()  current query position
+    window: Optional[int] = None,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    c = k_cache.shape[1]
+    kheads = k_cache.shape[2]
+    g = h // kheads
+    if c % block_kv:
+        raise ValueError(f"cache {c} not divisible by block_kv {block_kv}")
+    nk = c // block_kv
+
+    qg = q.reshape(b, kheads, g, d)
+    kt = k_cache.transpose(0, 2, 1, 3)       # (B, K, C, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    pos_blocks = positions.reshape(nk, block_kv)
+    npos = next_pos.reshape(1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, ck=block_kv, nk=nk, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kheads, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_kv), lambda b_, k_, j: (j, 0)),
+            pl.BlockSpec((1,), lambda b_, k_, j: (0,)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, k_, j: (b_, k_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, k_, j: (b_, k_, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, k_, j: (b_, k_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, k_, j: (b_, k_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kheads, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_blocks, npos, qg, kt, vt)
+    return out.reshape(b, h, d)

@@ -1,0 +1,131 @@
+"""Flash attention forward — Pallas TPU kernel (GQA / causal / sliding
+window), online-softmax with KV streaming.
+
+TPU mapping (HARDWARE ADAPTATION, DESIGN.md §2): the grid is
+``(batch, kv_head, q_group, q_block, kv_block)`` with the KV-block axis
+innermost — TPU grids execute the trailing axis sequentially on-core, so
+the running (m, l, acc) softmax state lives in VMEM scratch and carries
+across KV blocks without HBM round-trips.  Block shapes are multiples of
+(8, 128) so the MXU sees aligned operands; the (cq × ck) score tile stays
+resident in VMEM.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.flash_attention_ref``
+(pure jnp) over shape/dtype/window sweeps in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref,      # blocks
+    m_scr, l_scr, acc_scr,           # VMEM scratch (carried over kv blocks)
+    *, cq: int, ck: int, nk: int, scale: float,
+    causal: bool, window: Optional[int],
+):
+    j = pl.program_id(4)             # kv block (innermost, sequential)
+    i = pl.program_id(3)             # q block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = i * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    k_pos = j * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    allow = jnp.ones((cq, ck), jnp.bool_)
+    if causal:
+        allow &= k_pos <= q_pos
+    if window is not None:
+        allow &= k_pos > q_pos - window
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)          # (cq, D)
+    k = k_ref[0, 0].astype(jnp.float32)             # (ck, D)
+    v = v_ref[0, 0].astype(jnp.float32)             # (ck, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(allow, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * corr + p.sum(axis=1)
+    acc_new = acc_scr[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0, 0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_fwd(
+    q: jax.Array,                    # (B, S, H, D)
+    k: jax.Array,                    # (B, S, K, D)
+    v: jax.Array,                    # (B, S, K, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    if s % block_q or s % block_kv:
+        raise ValueError(f"seq {s} not divisible by blocks ({block_q},{block_kv})")
+    nq, nk = s // block_q, s // block_kv
+    scale = 1.0 / math.sqrt(d)
+
+    # (B, K, G, S, D) so the grid maps cleanly onto GQA groups
+    qg = q.reshape(b, s, kheads, g, d).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)      # (B, K, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, cq=block_q, ck=block_kv, nk=nk, scale=scale,
+        causal=causal, window=window,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kheads, g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, d), lambda b_, k_, g_, i, j: (b_, k_, g_, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, k_, g_, i, j: (b_, k_, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, k_, g_, i, j: (b_, k_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, block_q, d), lambda b_, k_, g_, i, j: (b_, k_, g_, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kheads, g, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),          # m
+            pltpu.VMEM((block_q,), jnp.float32),          # l
+            pltpu.VMEM((block_q, d), jnp.float32),        # acc
+        ],
+        interpret=interpret,
+    )(qg, kt, vt)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)

@@ -1,0 +1,106 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid ``(batch, head_block, chunk)`` with the chunk axis innermost; the
+(P × N) recurrent state per head carries across chunks in VMEM scratch.
+Per chunk: the intra-chunk term is a decay-gated (T × T) score matmul on
+the MXU (scores are shared across heads in the block since Mamba2 uses one
+B/C group), the inter-chunk term reads the carried state, and the state
+folds the chunk in — identical math to ``repro.models.mamba2._ssd_chunked``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba2_ssd_fwd"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_scr, *, nc: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (T, HB, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (T, HB)
+    a = a_ref[0].astype(jnp.float32)           # (HB,)
+    bm = b_ref[0].astype(jnp.float32)          # (T, N)
+    cm = c_ref[0].astype(jnp.float32)          # (T, N)
+    t, hb, p = x.shape
+    n = bm.shape[-1]
+
+    da = dt * a[None, :]                       # (T, HB) ≤ 0
+    cum = jnp.cumsum(da, axis=0)               # inclusive
+    total = cum[-1]                            # (HB,)
+
+    # intra-chunk: gated[t,u,h] = (C_t·B_u) exp(cum[t]-cum[u]) dt_u, u ≤ t
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # (T, T)
+    pair = cum[:, None, :] - cum[None, :, :]                        # (T,T,HB) ≤0 kept
+    tri = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (t, t), 1
+    )
+    wmat = jnp.where(tri[:, :, None], jnp.exp(pair), 0.0)
+    gated = scores[:, :, None] * wmat * dt[None, :, :]              # (T,T,HB)
+    y_intra = jnp.einsum("tuh,uhp->thp", gated, x)
+
+    # inter-chunk from carried state: y[t] += C_t · (exp(cum[t]) ⊙ h_prev)
+    h_prev = h_scr[...].reshape(hb, p, n)
+    y_inter = jnp.einsum("tn,th,hpn->thp", cm, jnp.exp(cum), h_prev)
+
+    # state update: h = exp(total) h_prev + sum_u exp(total-cum[u]) dt_u B_u x_u
+    decay_to_end = jnp.exp(total[None, :] - cum) * dt               # (T, HB)
+    h_new = jnp.exp(total)[:, None, None] * h_prev + jnp.einsum(
+        "th,tn,thp->hpn", decay_to_end, bm, x
+    )
+    h_scr[...] = h_new.reshape(hb, p * n)
+
+    o_ref[0, 0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def mamba2_ssd_fwd(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)
+    a: jax.Array,     # (H,) negative decay rates
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    chunk: int = 64,
+    head_block: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    if s % chunk or h % head_block:
+        raise ValueError(f"S={s} % chunk={chunk} or H={h} % hb={head_block}")
+    nc = s // chunk
+    nh = h // head_block
+
+    xt = x.transpose(0, 2, 1, 3).reshape(b, nh, head_block, s, p)
+    xt = xt.transpose(0, 1, 3, 2, 4)          # (B, NH, S, HB, P)
+    dtt = dt.transpose(0, 2, 1).reshape(b, nh, head_block, s).transpose(0, 1, 3, 2)
+    at = a.reshape(nh, head_block)
+
+    kernel = functools.partial(_kernel, nc=nc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, head_block, p), lambda b_, h_, j: (b_, h_, j, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, head_block), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, head_block), lambda b_, h_, j: (h_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, j: (b_, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, j: (b_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, chunk, head_block, p), lambda b_, h_, j: (b_, h_, j, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, nh, s, head_block, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((head_block, p * n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, bmat, cmat)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, p)

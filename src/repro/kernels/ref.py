@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These are the ground truth for the per-kernel shape/dtype sweeps in
+``tests/test_kernels.py``.  Where the model code already contains the
+reference math (chunked attention, chunked WKV, chunked SSD), the oracle
+simply re-exports the *naive* form so kernels are validated against an
+implementation with entirely different structure.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import dense_attention
+from repro.models.rwkv6 import rwkv6_recurrent
+
+__all__ = [
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "rwkv6_wkv_ref",
+    "mamba2_ssd_ref",
+]
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    s = q.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    return dense_attention(q, k, v, pos, pos, causal, window)
+
+
+def decode_attention_ref(
+    q: jax.Array,           # (B, H, D)
+    k_cache: jax.Array,     # (B, C, K, D)
+    v_cache: jax.Array,
+    positions: jax.Array,   # (C,)
+    next_pos: jax.Array,    # ()
+    window: Optional[int] = None,
+) -> jax.Array:
+    out = dense_attention(
+        q[:, None], k_cache, v_cache,
+        next_pos[None].astype(jnp.int32), positions,
+        causal=True, window=window,
+    )
+    return out[:, 0]
+
+
+def rwkv6_wkv_ref(r, k, v, logw, u, s0=None):
+    """Step-by-step recurrence (structurally unlike the chunked kernel)."""
+    b, s, h, dk = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+    y, _ = rwkv6_recurrent(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        logw.astype(jnp.float32), u.astype(jnp.float32), s0,
+    )
+    return y
+
+
+def mamba2_ssd_ref(x, dt, a, bmat, cmat, h0=None):
+    """Sequential SSD recurrence: h_t = exp(dt_t a) h + dt_t B_t ⊗ x_t;
+    y_t = C_t · h_t."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hst, inputs):
+        xt, dtt, bt, ct = inputs
+        dec = jnp.exp(dtt * a[None, :])
+        h_new = hst * dec[..., None, None] + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h_new)
+        return h_new, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(cmat.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,109 @@
+"""RWKV6 WKV chunked scan — Pallas TPU kernel.
+
+Grid ``(batch, head, chunk)`` with the chunk axis innermost: the (dk × dv)
+recurrent state lives in VMEM scratch and carries across chunks (TPU grids
+execute the trailing axis sequentially).  Per chunk the kernel computes the
+intra-chunk pairwise-decay attention term on the MXU plus the inter-chunk
+state read, then folds the chunk into the state — the same math as
+``repro.models.rwkv6._wkv_chunked``, validated against the step-by-step
+oracle ``rwkv6_recurrent``.
+
+TPU adaptation notes: the (T × T × dk) pairwise-decay tensor of the jnp
+path is never materialized — the kernel loops the decay factorization
+through f32 VMEM tiles of (T, dk), and state updates run on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_wkv_fwd"]
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *, nc: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (T, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)    # (T, K) log decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)         # (K,)
+
+    t = r.shape[0]
+    cum = jnp.cumsum(lw, axis=0)                       # inclusive
+    cum_tm1 = cum - lw                                 # exclusive prefix
+    total = cum[-1]
+
+    # intra-chunk: y[t] = sum_{u<t} (r_t·exp(cum_tm1[t]-cum[u])·k_u) v_u
+    #            + (r_t·diag(u)·k_t) v_t
+    # pairwise log-domain form: exponents are ≤ 0 for every kept (t, u)
+    # pair, so no overflow for arbitrarily strong decay.  The (T, T, K)
+    # tile is ~1 MiB VMEM at T=K=64 (bounded, static).
+    pair = cum_tm1[:, None, :] - cum[None, :, :]       # (T, T, K)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) > jax.lax.broadcasted_iota(
+        jnp.int32, (t, t), 1
+    )
+    wpair = jnp.where(tri[:, :, None], jnp.exp(pair), 0.0)
+    amat = jnp.einsum(
+        "tk,uk,tuk->tu", r, k, wpair,
+    )
+    diag = jnp.sum(r * u[None, :] * k, axis=1)         # (T,)
+    y = jnp.dot(amat, v, preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+    kw = k * jnp.exp(total - cum)                      # (T, K), exponents ≤ 0
+
+    # inter-chunk: y[t] += (r_t * exp(cum_tm1[t])) @ S
+    y = y + jnp.dot(r * jnp.exp(cum_tm1), s_scr[...],
+                    preferred_element_type=jnp.float32)
+
+    # state update: S = diag(exp(total)) S + sum_u (k_u exp(total-cum[u])) v_u^T
+    s_scr[...] = s_scr[...] * jnp.exp(total)[:, None] + jnp.dot(
+        kw.T, v, preferred_element_type=jnp.float32
+    )
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv_fwd(
+    r: jax.Array,      # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,   # (B, S, H, K), ≤ 0
+    u: jax.Array,      # (H, K)
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, dk = r.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+
+    def prep(x):
+        return x.transpose(0, 2, 1, 3)     # (B, H, S, K)
+
+    kernel = functools.partial(_kernel, nc=nc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, dk), lambda b_, h_, j: (h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, j: (b_, h_, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dk), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dk, dk), jnp.float32)],
+        interpret=interpret,
+    )(prep(r), prep(k), prep(v), prep(logw), u)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,306 @@
+"""Shared lowering utilities for the dry-run and roofline analysis.
+
+This module does NOT touch device-count flags — ``dryrun.py`` sets
+``xla_force_host_platform_device_count`` before any jax import; everything
+here just builds step functions and lowers them against ShapeDtypeStruct
+stand-ins (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, SHAPES, get_config, input_specs, shape_applicability
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    Ruleset,
+    batch_specs,
+    decode_state_spec,
+    default_rules,
+    shard_params_spec,
+)
+from repro.models import Model
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_init
+from repro.train.loop import make_train_step
+
+__all__ = [
+    "LoweredStep",
+    "build_lowered",
+    "collective_bytes",
+    "hlo_collective_table",
+    "param_shapes",
+]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass
+class LoweredStep:
+    arch: str
+    shape: str
+    mesh_desc: str
+    kind: str
+    lowered: Any
+    compiled: Any = None
+
+    def compile(self):
+        if self.compiled is None:
+            self.compiled = self.lowered.compile()
+        return self.compiled
+
+
+def param_shapes(model: Model):
+    """ShapeDtypeStructs of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def opt_shapes(params_shapes):
+    return jax.eval_shape(adamw_init, params_shapes)
+
+
+MICRO_TOKENS = 8192      # target tokens per device per microbatch
+FSDP_BYTES_THRESHOLD = 8e9   # params+opt bytes/device above which FSDP kicks in
+
+
+def auto_policies(cfg, model, mesh, shape, fsdp, grad_accum):
+    """Resolve production memory policies (recorded per dry-run record):
+
+    * FSDP: params are kept bf16 + f32 Adam moments = 10 bytes/param; if
+      10·N / model_axis exceeds the threshold, shard the ``embed`` dim over
+      the data axes too (ZeRO-3 style).  For inference (prefill/decode)
+      there is no optimizer state but the same applies at 2 bytes/param —
+      mixtral-8x22b at 16-way TP is 17.6 GB/chip of bf16 weights and MUST
+      shard over data as well (weights are read-only; XLA gathers per
+      layer).
+    * grad accumulation: cap per-device tokens per microbatch at
+      MICRO_TOKENS (activation carries of a scanned 50+-layer stack
+      otherwise exceed HBM).
+    """
+    from repro.distributed.sharding import axis_size as _axsz
+
+    msize = mesh.shape.get("model", 1)
+    if fsdp is None:
+        n = model.num_params()
+        bytes_per_param = 10.0 if shape.kind == "train" else 2.2
+        fsdp = (bytes_per_param * n / msize) > FSDP_BYTES_THRESHOLD
+    if grad_accum is None:
+        if shape.kind == "train":
+            data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            dsz = _axsz(mesh, data_axes) if data_axes else 1
+            b_loc = max(shape.global_batch // dsz, 1)
+            tokens_loc = b_loc * shape.seq_len
+            grad_accum = 1
+            while (
+                tokens_loc // grad_accum > MICRO_TOKENS
+                and grad_accum < b_loc
+                and b_loc % (grad_accum * 2) == 0
+            ):
+                grad_accum *= 2
+        else:
+            grad_accum = 1
+    return fsdp, grad_accum
+
+
+def build_lowered(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    rules: Optional[Ruleset] = None,
+    fsdp: Optional[bool] = None,
+    grad_accum: Optional[int] = None,
+    cfg_overrides: Optional[dict] = None,
+    donate: bool = True,
+    pin_microbatch: bool = True,
+) -> LoweredStep:
+    """Lower one (arch × shape) combination on the given mesh.
+
+    train/prefill shapes lower ``train_step`` / ``forward``; decode shapes
+    lower ``serve_step`` (one token against a seq_len cache).  ``fsdp`` and
+    ``grad_accum`` default to auto policies (see ``auto_policies``).
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicability(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} × {shape_name} skipped by design: {why}")
+
+    model = Model(cfg)
+    fsdp, grad_accum = auto_policies(cfg, model, mesh, shape, fsdp, grad_accum)
+    rules = rules or default_rules(cfg, mesh, fsdp=fsdp)
+
+    def named(spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    pspec = named(shard_params_spec(model, rules))
+    p_shapes = param_shapes(model)
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+
+    with mesh:
+        if shape.kind == "train":
+            o_shapes = opt_shapes(p_shapes)
+            ospec = AdamWState(
+                step=named(P()), mu=pspec, nu=pspec, loss_scale=named(P())
+            )
+            batch = input_specs(cfg, shape)
+            bspec = named(batch_specs(cfg, mesh, rules, batch))
+            micro_spec = None
+            if grad_accum > 1 and pin_microbatch:
+                data = rules.lookup("batch")
+                micro_spec = jax.tree.map(
+                    lambda x: P(None, data, *([None] * (len(x.shape) - 1))),
+                    batch,
+                )
+            step = make_train_step(model, AdamWConfig(), grad_accum,
+                                   micro_spec=micro_spec)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspec, ospec, bspec),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(p_shapes, o_shapes, batch)
+            kind = "train_step"
+
+        elif shape.kind == "prefill":
+            batch = input_specs(cfg, shape)
+            bspec = named(batch_specs(cfg, mesh, rules, batch))
+
+            def prefill(params, b):
+                # serving returns only the last-position logits (next-token);
+                # Model.prefill never materializes (B, S, V) logits
+                return model.prefill(params, b)
+
+            jitted = jax.jit(prefill, in_shardings=(pspec, bspec))
+            lowered = jitted.lower(p_shapes, batch)
+            kind = "prefill_step"
+
+        else:  # decode
+            state_shapes = jax.eval_shape(
+                lambda: model.init_decode_state(shape.global_batch, shape.seq_len)
+            )
+            sspec = named(decode_state_spec(cfg, mesh, rules, state_shapes))
+            tok = input_specs(cfg, shape)["tokens"]
+            tspec = named(batch_specs(cfg, mesh, rules, {"tokens": tok})["tokens"])
+
+            def serve(params, state, tokens):
+                logits, state = model.decode_step(params, state, tokens)
+                return jnp.argmax(logits, -1).astype(jnp.int32), state
+
+            jitted = jax.jit(
+                serve,
+                in_shardings=(pspec, sspec, tspec),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(p_shapes, state_shapes, tok)
+            kind = "serve_step"
+
+    step = LoweredStep(arch, shape_name, mesh_desc, kind, lowered)
+    step.fsdp = fsdp
+    step.grad_accum = grad_accum
+    return step
+
+
+_ELIDED_OPS = {
+    # CPU-lowering / layout artifacts that a TPU executes fused or natively:
+    # bf16 operands need no convert on the MXU; copies/bitcasts/transposes
+    # are layout bookkeeping; broadcasts fuse into consumers.
+    "convert", "copy", "bitcast", "transpose", "reshape", "broadcast",
+    "get-tuple-element", "tuple", "parameter", "constant", "iota",
+}
+
+_DTYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def hlo_fused_bytes(hlo_text: str) -> float:
+    """Fusion-aware traffic estimate: sum of result-buffer bytes over compute
+    ops (excluding converts/copies/layout ops — CPU-backend artifacts that a
+    TPU fuses away).  Each intermediate is counted once (written once, read
+    ~once downstream ⇒ multiply by 2 for traffic); module arguments are added
+    once by the caller.  This is the TPU-realistic *lower* estimate; raw
+    ``cost_analysis``'s "bytes accessed" is the unfused upper bound.
+    """
+    total = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%\S+\s*=\s*", s)
+        if not m:
+            continue
+        op = re.search(r"=\s*\S+\s+([\w-]+)\(", s)
+        if not op or op.group(1) in _ELIDED_OPS:
+            continue
+        sm = _DTYPE_RE.search(s.split("=", 1)[1])
+        if not sm:
+            continue
+        dt, dims = sm.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_collective_table(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Parse an (SPMD, per-device) HLO module and sum the result-shape bytes
+    of every collective op, grouped by op kind.
+
+    Returns {op: {"count": n, "bytes": total}} where bytes are per-device
+    per-step (the roofline's collective numerator).
+    """
+    out: dict[str, dict[str, float]] = {}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-typed instruction lines look like: `%x = bf16[1,2]{...} all-reduce(...`
+        for op in _COLLECTIVES:
+            if f" {op}(" in s or f" {op}-start(" in s:
+                # result shape(s): everything between '=' and the op name
+                try:
+                    lhs, rhs = s.split("=", 1)
+                except ValueError:
+                    continue
+                head = rhs.split(op)[0]
+                nbytes = 0
+                for m in shape_re.finditer(head):
+                    dt, dims = m.groups()
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dt]
+                rec = out.setdefault(op, {"count": 0, "bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes"] += float(nbytes)
+                break
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in hlo_collective_table(hlo_text).values())

@@ -1,0 +1,328 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md, §Roofline).
+
+Three terms, all in seconds-per-step on the target hardware (TPU v5e):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+FLOPs and bytes come from ``compiled.cost_analysis()`` (per-device SPMD
+module); collective bytes from parsing the compiled HLO (they are NOT in
+cost_analysis).  MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE; 2·N·D for
+inference) gives the "useful fraction" diagnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+from .lowering import LoweredStep, collective_bytes, hlo_collective_table, hlo_fused_bytes
+
+__all__ = [
+    "Hardware",
+    "V5E",
+    "RooflineReport",
+    "analyze",
+    "analyze_extrapolated",
+    "model_flops",
+    "extract_costs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float     # FLOP/s (bf16)
+    hbm_bw: float         # B/s
+    link_bw: float        # B/s per ICI link
+    hbm_bytes: float      # per-chip capacity
+
+
+V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9, hbm_bytes=16e9)
+
+
+def active_params(cfg: ModelConfig, model: Model) -> float:
+    """Per-token active parameter count (MoE: top-k experts only)."""
+    n = model.num_params()
+    if not cfg.num_experts:
+        return float(n)
+    # expert params scale by k/E; everything else is always active
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    d, f = cfg.d_model, cfg.d_ff
+    per_layer_expert = e * (3 if cfg.mlp_gated else 2) * d * f
+    expert_total = cfg.num_layers * per_layer_expert
+    return float(n - expert_total + expert_total * (k / e))
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Useful FLOPs per step, global: 6·N_active·D for training,
+    2·N_active·D for inference (D = tokens processed in the step)."""
+    model = Model(cfg)
+    n_act = active_params(cfg, model)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_act * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float            # fused (TPU-realistic) estimate — decisions use this
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_fraction: float        # MODEL_FLOPS / (HLO_FLOPs × chips)
+    collectives: dict
+    memory_raw_s: float = 0.0     # unfused cost_analysis upper bound
+    memory_analysis: Optional[dict] = None
+    note: str = ""
+
+    def as_row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("collectives", None)
+        d.pop("memory_analysis", None)
+        return d
+
+    def bound_summary(self) -> str:
+        return (
+            f"{self.arch} × {self.shape} [{self.mesh}] {self.dominant}-bound: "
+            f"compute {self.compute_s*1e3:.3f}ms, memory {self.memory_s*1e3:.3f}ms "
+            f"(raw {self.memory_raw_s*1e3:.3f}ms), "
+            f"collective {self.collective_s*1e3:.3f}ms; useful={self.useful_fraction:.2f}"
+        )
+
+
+def _mem_analysis_dict(compiled) -> Optional[dict]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out or None
+
+
+def analyze(
+    step: LoweredStep, hw: Hardware = V5E, chips: Optional[int] = None
+) -> RooflineReport:
+    compiled = step.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    # XLA reports several byte counters depending on backend/version
+    nbytes = float(
+        cost.get("bytes accessed", cost.get("bytes_accessed", 0.0))
+    )
+    if nbytes == 0.0:
+        nbytes = sum(
+            float(v) for k, v in cost.items() if k.startswith("bytes accessed")
+        )
+
+    hlo = compiled.as_text()
+    table = hlo_collective_table(hlo)
+    cbytes = sum(v["bytes"] for v in table.values())
+
+    if chips is None:
+        chips = math.prod(int(x) for x in step.mesh_desc.split("x"))
+
+    cfg = get_config(step.arch)
+    mf = model_flops(cfg, step.shape)
+
+    compute_s = flops / hw.peak_flops
+    memory_s = nbytes / hw.hbm_bw
+    collective_s = cbytes / hw.link_bw
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    useful = mf / (flops * chips) if flops else float("nan")
+
+    return RooflineReport(
+        arch=step.arch,
+        shape=step.shape,
+        mesh=step.mesh_desc,
+        kind=step.kind,
+        chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=nbytes,
+        collective_bytes_per_device=cbytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_global=mf,
+        useful_fraction=useful,
+        collectives=table,
+        memory_analysis=_mem_analysis_dict(compiled),
+    )
+
+
+# --------------------------------------------------------------------------
+# trip-count-correct analysis via affine-in-depth extrapolation
+# --------------------------------------------------------------------------
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+# count, so a scanned-over-layers module under-reports flops/bytes and the
+# per-layer collectives.  Rather than parse loop bounds out of HLO (fragile),
+# we exploit structure: every cost term is affine in depth,
+#     cost(L) = fixed + per_layer · L
+# so compiling two reduced-depth variants with ALL scans unrolled
+# (`scan_unroll=True`, exact same math) identifies both coefficients, and
+# the full-depth cost follows exactly.  The production full-depth scanned
+# module is still compiled separately for the memory-fit proof.
+
+_ANALYSIS_OVERRIDES = {
+    "scan_unroll": True,
+    # bigger attention chunks keep the unrolled module small; identical
+    # FLOPs/collectives, slightly coarser temp granularity (documented)
+    "attn_chunk_q": 2048,
+    "attn_chunk_kv": 4096,
+    "loss_chunk": 4096,
+}
+
+
+def extract_costs(compiled) -> dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    if nbytes == 0.0:
+        nbytes = sum(float(v) for k, v in cost.items() if k.startswith("bytes accessed"))
+    hlo = compiled.as_text()
+    table = hlo_collective_table(hlo)
+    return {
+        "flops": flops,
+        "bytes": nbytes,
+        "bytes_fused": 2.0 * hlo_fused_bytes(hlo),
+        "collective_bytes": sum(v["bytes"] for v in table.values()),
+        "collective_table": table,
+    }
+
+
+def _analysis_depths(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(L1, L2, L_full) for the extrapolation, respecting family structure."""
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every, cfg.num_layers
+    return 2, 4, cfg.num_layers
+
+
+def analyze_extrapolated(
+    arch: str,
+    shape_name: str,
+    mesh,
+    hw: Hardware = V5E,
+    *,
+    cfg_overrides: Optional[dict] = None,
+    rules=None,
+    fsdp=None,
+    grad_accum=None,
+    pin_microbatch: bool = True,
+) -> RooflineReport:
+    from .lowering import build_lowered
+
+    base_overrides = dict(cfg_overrides or {})
+    cfg = get_config(arch)
+    if base_overrides:
+        cfg = cfg.replace(**base_overrides)
+    l1, l2, lfull = _analysis_depths(cfg)
+
+    costs = []
+    mesh_desc = None
+    kind = None
+    tables = []
+    for depth in (l1, l2):
+        # variant overrides take precedence over analysis defaults
+        ov = {**_ANALYSIS_OVERRIDES, **base_overrides,
+              "num_layers": depth, "scan_unroll": True}
+        step = build_lowered(
+            arch, shape_name, mesh,
+            cfg_overrides=ov, rules=rules, fsdp=fsdp, grad_accum=grad_accum,
+            pin_microbatch=pin_microbatch,
+        )
+        mesh_desc, kind = step.mesh_desc, step.kind
+        c = extract_costs(step.compile())
+        costs.append(c)
+        tables.append(c["collective_table"])
+
+    def affine(key: str) -> float:
+        slope = (costs[1][key] - costs[0][key]) / (l2 - l1)
+        return costs[0][key] + slope * (lfull - l1)
+
+    flops = affine("flops")
+    nbytes = affine("bytes")
+    fused = affine("bytes_fused")
+    cbytes = affine("collective_bytes")
+
+    # extrapolated per-op collective table (counts & bytes affine in depth)
+    table: dict[str, dict[str, float]] = {}
+    for op in set(tables[0]) | set(tables[1]):
+        a = tables[0].get(op, {"count": 0, "bytes": 0.0})
+        b = tables[1].get(op, {"count": 0, "bytes": 0.0})
+        table[op] = {
+            "count": a["count"] + (b["count"] - a["count"]) / (l2 - l1) * (lfull - l1),
+            "bytes": a["bytes"] + (b["bytes"] - a["bytes"]) / (l2 - l1) * (lfull - l1),
+        }
+
+    chips = math.prod(int(x) for x in mesh_desc.split("x"))
+    mf = model_flops(cfg, shape_name)
+    compute_s = flops / hw.peak_flops
+    memory_raw_s = nbytes / hw.hbm_bw
+    memory_s = fused / hw.hbm_bw
+    collective_s = cbytes / hw.link_bw
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    return RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_desc,
+        kind=kind,
+        chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=nbytes,
+        collective_bytes_per_device=cbytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        memory_raw_s=memory_raw_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_global=mf,
+        useful_fraction=mf / (flops * chips) if flops else float("nan"),
+        collectives=table,
+        note=f"extrapolated from unrolled depths {l1},{l2} -> {lfull}; "
+             f"memory term = fused estimate (raw upper bound {memory_raw_s*1e3:.1f}ms)",
+    )

@@ -1,0 +1,74 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+        --steps 50 --batch 8 --seq 256
+
+Full-config runs target the production mesh (--mesh single|multi) and are
+intended for real TPU slices; on CPU use --smoke (reduced config, local
+mesh).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model
+from repro.train import DataConfig, PrefetchIterator, TrainConfig, Trainer, save_checkpoint, synthetic_batches
+from repro.train.optimizer import AdamWConfig
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config + local mesh")
+    ap.add_argument("--mesh", choices=("local", "single", "multi"), default="local")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    print(f"arch={cfg.name} params={model.num_params()/1e6:.1f}M family={cfg.family}")
+
+    mesh = (
+        make_local_mesh()
+        if args.mesh == "local"
+        else make_production_mesh(multi_pod=args.mesh == "multi")
+    )
+    trainer = Trainer(
+        model, mesh,
+        TrainConfig(
+            opt=AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                            total_steps=args.steps),
+            grad_accum=args.grad_accum,
+        ),
+        fsdp=args.fsdp,
+    )
+    params, opt_state = trainer.init(jax.random.PRNGKey(0))
+    batches = PrefetchIterator(
+        ({k: jnp.asarray(v) for k, v in b.items()}
+         for b in synthetic_batches(cfg, DataConfig(batch=args.batch, seq_len=args.seq))),
+    )
+
+    def log(i, m):
+        print(f"step {i:5d} loss={m['loss']:.4f} lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f}",
+              flush=True)
+
+    params, opt_state = trainer.fit(params, opt_state, batches, args.steps, log=log)
+    s = trainer.latency_summary()
+    print(f"step latency: mean={s.mean*1e3:.1f}ms cv={s.cv:.3f} p99={s.p99*1e3:.1f}ms")
+    if args.ckpt:
+        print("saved:", save_checkpoint(args.ckpt, args.steps, {"params": params, "opt": opt_state}))
+
+
+if __name__ == "__main__":
+    main()

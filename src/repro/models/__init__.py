@@ -1,0 +1,13 @@
+"""Model zoo: composable JAX model definitions for every assigned family."""
+from .transformer import DecodeState, Model
+from .params import ParamSpec, axes_tree, count_params, init_params, stack_specs
+
+__all__ = [
+    "DecodeState",
+    "Model",
+    "ParamSpec",
+    "axes_tree",
+    "count_params",
+    "init_params",
+    "stack_specs",
+]

@@ -1,0 +1,356 @@
+"""Attention: GQA projections, dense / chunked (memory-efficient) softmax
+attention, sliding windows, and single-token decode against KV caches.
+
+Long sequences never materialize ``seq × seq`` logits: the chunked path is
+an online-softmax scan over KV blocks (the pure-JAX equivalent of the Pallas
+flash kernel in ``repro.kernels.flash_attention``).  Grouped-query heads are
+computed in grouped form — KV is never repeated to ``num_heads``.
+
+Two chunk schedules exist for causal attention:
+
+* ``masked``     — scan over *all* KV chunks with masking (baseline; ~2×
+                   attention FLOPs for causal),
+* ``triangular`` — per-q-chunk python loop visiting only chunks ``j ≤ i``
+                   and inside the sliding window (the §Perf optimization;
+                   `cfg.causal_chunk_skip`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .params import ParamSpec
+from .layers import apply_rope, rmsnorm, rope
+
+__all__ = [
+    "attention_specs",
+    "attention_block",
+    "decode_attention_block",
+    "KVCache",
+    "init_kv_cache",
+    "dense_attention",
+    "chunked_attention",
+]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "wq": ParamSpec((d, cfg.num_heads, cfg.head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.num_kv_heads, cfg.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.num_kv_heads, cfg.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.num_heads, cfg.head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((cfg.num_heads, cfg.head_dim), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = ParamSpec((cfg.num_kv_heads, cfg.head_dim), ("kv_heads", "head_dim"), init="zeros")
+        specs["bv"] = ParamSpec((cfg.num_kv_heads, cfg.head_dim), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = {"scale": ParamSpec((cfg.head_dim,), ("head_dim",), init="ones")}
+        specs["k_norm"] = {"scale": ParamSpec((cfg.head_dim,), ("head_dim",), init="ones")}
+    return specs
+
+
+def _project_qkv(params: Mapping[str, Any], x: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# grouped softmax attention primitives
+# --------------------------------------------------------------------------
+
+def _group_q(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, D) → (B, S, K, G, D) with H = K*G."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: Optional[int]):
+    """(q, k) boolean allow-mask from position vectors."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    allow = kp >= 0  # negative k positions mark unwritten cache slots
+    if causal:
+        allow &= kp <= qp
+    if window is not None:
+        allow &= kp > qp - window
+    return allow
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """Reference-style attention; fine for seq ≲ 4k (used by smoke tests and
+    as the oracle for the chunked path). Grouped-query, no KV repeat."""
+    num_kv = k.shape[2]
+    # scale folded into q (tiny tensor) and f32 accumulation requested from
+    # the einsum itself: avoids a separate convert+multiply pass over the
+    # (B,K,G,S,T) score tensor — a full HBM round-trip per layer (§Perf)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qg = _group_q(q * jnp.asarray(scale, q.dtype), num_kv)  # (B,S,K,G,D)
+    scores = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32
+    )
+    allow = _mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(allow[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs, v)
+    b, s, kh, g, d = out.shape
+    return out.reshape(b, s, kh * g, d)
+
+
+class _SoftmaxState(NamedTuple):
+    m: jax.Array    # running max        (B, K, G, cq)
+    l: jax.Array    # running normalizer (B, K, G, cq)
+    acc: jax.Array  # running numerator  (B, cq, K, G, D)
+
+
+def _attend_chunk(
+    state: _SoftmaxState,
+    qg: jax.Array,       # (B, cq, K, G, D)
+    k: jax.Array,        # (B, ck, K, D)
+    v: jax.Array,        # (B, ck, K, D)
+    q_pos: jax.Array,    # (cq,)
+    k_pos: jax.Array,    # (ck,)
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+) -> _SoftmaxState:
+    scores = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    allow = _mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(allow[None, None, None], scores, NEG_INF)
+    m_new = jnp.maximum(state.m, scores.max(axis=-1))
+    corr = jnp.exp(state.m - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    l_new = state.l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v).astype(jnp.float32)
+    acc_new = state.acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+    return _SoftmaxState(m_new, l_new, acc_new)
+
+
+def _finish(state: _SoftmaxState) -> jax.Array:
+    l = jnp.moveaxis(jnp.maximum(state.l, 1e-30), -1, 1)[..., None]
+    out = state.acc / l
+    b, cq, kh, g, d = out.shape
+    return out.reshape(b, cq, kh * g, d)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_start: int | jax.Array,
+    causal: bool,
+    window: Optional[int],
+    chunk_q: int,
+    chunk_kv: int,
+    triangular: bool = True,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax blockwise attention.  ``q_start`` is the absolute
+    position of q[0] (k/v start at position 0).
+
+    triangular=True visits only KV chunks intersecting the allowed band
+    (causal upper bound + sliding-window lower bound) — exact same result,
+    ~half the FLOPs for causal, O(window) for SWA.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    if sq % chunk_q or sk % chunk_kv:
+        raise ValueError(f"seq ({sq},{sk}) not divisible by chunks ({chunk_q},{chunk_kv})")
+    num_kv = k.shape[2]
+    g = h // num_kv
+    scale = 1.0 / math.sqrt(d)
+    nq, nk = sq // chunk_q, sk // chunk_kv
+
+    qg = q.reshape(b, nq, chunk_q, num_kv, g, d)
+    kc = k.reshape(b, nk, chunk_kv, num_kv, d)
+    vc = v.reshape(b, nk, chunk_kv, num_kv, d)
+    k_positions = jnp.arange(sk, dtype=jnp.int32).reshape(nk, chunk_kv)
+
+    def init_state() -> _SoftmaxState:
+        return _SoftmaxState(
+            m=jnp.full((b, num_kv, g, chunk_q), NEG_INF, jnp.float32),
+            l=jnp.zeros((b, num_kv, g, chunk_q), jnp.float32),
+            acc=jnp.zeros((b, chunk_q, num_kv, g, d), jnp.float32),
+        )
+
+    def kv_scan(qi: jax.Array, q_pos: jax.Array, lo: int, hi: int) -> jax.Array:
+        """Online-softmax scan over KV chunks ``lo:hi`` for one q chunk."""
+        def body(state, inputs):
+            kj, vj, kp = inputs
+            return _attend_chunk(state, qi, kj, vj, q_pos, kp, causal, window, scale), None
+
+        xs = (
+            jnp.moveaxis(kc[:, lo:hi], 1, 0),
+            jnp.moveaxis(vc[:, lo:hi], 1, 0),
+            k_positions[lo:hi],
+        )
+        state, _ = jax.lax.scan(body, init_state(), xs, unroll=True if unroll else 1)
+        return _finish(state)
+
+    static_start = isinstance(q_start, int)
+    if triangular and static_start:
+        # Exact triangular / banded schedule: python loop over q chunks,
+        # each scanning only the KV chunks inside its allowed band.
+        outs = []
+        for i in range(nq):
+            q_pos = q_start + i * chunk_q + jnp.arange(chunk_q, dtype=jnp.int32)
+            hi = nk
+            if causal:
+                hi = min(nk, (q_start + (i + 1) * chunk_q - 1) // chunk_kv + 1)
+            lo = 0
+            if window is not None:
+                lo = max(0, (q_start + i * chunk_q - window + 1) // chunk_kv)
+            lo = min(lo, max(hi - 1, 0))
+            outs.append(kv_scan(qg[:, i], q_pos, lo, hi))
+        out = jnp.stack(outs, axis=1).reshape(b, sq, h, d)
+        return out.astype(q.dtype)
+
+    # Masked schedule: scan over q chunks, inner scan over all KV chunks.
+    # Tiny HLO (two nested loops); ~2x attention FLOPs under causal masks.
+    q_pos_all = (
+        jnp.asarray(q_start, jnp.int32)
+        + jnp.arange(sq, dtype=jnp.int32).reshape(nq, chunk_q)
+    )
+
+    def q_body(_, inputs):
+        qi, q_pos = inputs
+        return None, kv_scan(qi, q_pos, 0, nk)
+
+    _, outs = jax.lax.scan(
+        q_body, None, (jnp.moveaxis(qg, 1, 0), q_pos_all), unroll=True if unroll else 1
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV cache (full + ring-buffer sliding window)
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (L, B, C, K, D) stacked over layers
+    v: jax.Array          # (L, B, C, K, D)
+    positions: jax.Array  # (C,)  absolute position per slot, -1 = empty
+    next_pos: jax.Array   # ()    next absolute position to write
+
+
+def init_kv_cache(
+    cfg: ModelConfig,
+    batch: int,
+    context: int,
+    dtype: jnp.dtype,
+    num_attn_layers: Optional[int] = None,
+) -> KVCache:
+    """A cache with capacity ``min(context, window)`` slots (ring buffer
+    when the arch uses a window at this context length)."""
+    window = cfg.effective_window(context)
+    cap = context if window is None else min(context, window)
+    layers = num_attn_layers if num_attn_layers is not None else cfg.num_layers
+    shape = (layers, batch, cap, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        positions=jnp.full((cap,), -1, jnp.int32),
+        next_pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_write_slot(cache_positions: jax.Array, next_pos: jax.Array) -> jax.Array:
+    """Ring-buffer slot for the next write."""
+    cap = cache_positions.shape[0]
+    return next_pos % cap
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def attention_block(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,        # (S,) absolute positions
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    cos, sin = rope(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import flash_attention  # lazy: avoids import cycle
+        out = flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=min(cfg.attn_chunk_q, s), block_kv=min(cfg.attn_chunk_kv, s),
+        )
+    elif s <= max(cfg.attn_chunk_q, 1024):
+        out = dense_attention(q, k, v, positions, positions, causal, window)
+    else:
+        out = chunked_attention(
+            q, k, v, 0, causal, window,
+            cfg.attn_chunk_q, cfg.attn_chunk_kv,
+            triangular=cfg.causal_chunk_skip,
+            unroll=cfg.scan_unroll,
+        )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def decode_attention_block(
+    params: Mapping[str, Any],
+    x: jax.Array,                # (B, 1, d)
+    cfg: ModelConfig,
+    k_cache: jax.Array,          # (B, C, K, D) this layer's cache
+    v_cache: jax.Array,
+    cache_positions: jax.Array,  # (C,)
+    next_pos: jax.Array,         # ()
+    window: Optional[int] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: write the new KV into its ring slot, attend over
+    the whole cache with position masking.  Returns (out, k_cache, v_cache).
+    """
+    q, k, v = _project_qkv(params, x, cfg)  # (B,1,H,D)/(B,1,K,D)
+    pos_vec = next_pos[None]
+    cos, sin = rope(pos_vec, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    slot = cache_write_slot(cache_positions, next_pos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    kp = cache_positions.at[slot].set(next_pos)
+
+    out = dense_attention(q, k_cache, v_cache, pos_vec, kp, causal=True, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, k_cache, v_cache

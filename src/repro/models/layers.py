@@ -1,0 +1,94 @@
+"""Shared neural-net building blocks: norms, rotary embeddings, MLPs."""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .params import ParamSpec
+
+__all__ = [
+    "rmsnorm",
+    "rmsnorm_spec",
+    "rope",
+    "apply_rope",
+    "mlp_specs",
+    "mlp",
+    "embed_specs",
+    "embed",
+    "unembed",
+]
+
+
+def rmsnorm_spec(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: Mapping[str, Any], x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """Rotary embedding tables for integer positions ``(..., seq)`` →
+    cos/sin of shape ``(..., seq, head_dim // 2)``."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2).
+
+    Rotates pairs (x[..., :half], x[..., half:]) — the "half-split" RoPE
+    convention (matches Llama/Qwen reference implementations).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    """SwiGLU (gate/up/down) by default; plain GELU (up/down) when the arch
+    calls for it (``mlp_gated=False``: Granite-20B-code, HuBERT)."""
+    d, f = cfg.d_model, cfg.d_ff
+    specs = {
+        "up": ParamSpec((d, f), ("embed", "mlp")),
+        "down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_gated:
+        specs["gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    return specs
+
+
+def mlp(params: Mapping[str, Any], x: jax.Array) -> jax.Array:
+    u = jnp.einsum("...d,df->...f", x, params["up"])
+    if "gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["down"])
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    return {"table": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed(params: Mapping[str, Any], tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Mapping[str, Any], x: jax.Array) -> jax.Array:
+    """Project hidden states to vocabulary logits (always f32 out)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), params["table"].astype(jnp.float32))

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality) block, as used by Zamba2 [arXiv:2411.15242].
+
+Sequence mixing is a selective state-space recurrence
+
+    h_t = exp(dt_t · A) ⊙ h_{t-1} + dt_t · B_t ⊗ x_t        (per head)
+    y_t = C_t · h_t + D ⊙ x_t
+
+computed in the *chunked* SSD form for train/prefill (intra-chunk quadratic
+attention-like term + inter-chunk state carry via ``lax.scan``) and as a
+single-step state update for decode — O(1) per token, the reason hybrid/SSM
+archs run ``long_500k`` natively (DESIGN.md §4).
+
+Shapes follow the Mamba2 convention: ``d_inner = expand · d_model`` split
+into heads of width ``ssm_head_dim`` (P); state size N = ``ssm_state``;
+scalar decay per head (A is per-head scalar, as in Mamba2).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .params import ParamSpec
+from .layers import rmsnorm_spec, rmsnorm
+
+__all__ = ["mamba2_specs", "mamba2_block", "mamba2_decode_step", "SSMState", "init_ssm_state"]
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    # in_proj emits [z (di), x (di), B (n·h_groups? -> n), C (n), dt (h)]
+    # we use single B/C shared across heads per Mamba2's grouped design with
+    # one group (ngroups=1), matching the reference minimal implementation.
+    return {
+        "in_z": ParamSpec((d, di), ("embed", "mlp")),
+        "in_x": ParamSpec((d, di), ("embed", "mlp")),
+        "in_b": ParamSpec((d, n), ("embed", None)),
+        "in_c": ParamSpec((d, n), ("embed", None)),
+        "in_dt": ParamSpec((d, h), ("embed", None)),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "a_log": ParamSpec((h,), (None,), init="zeros"),   # A = -exp(a_log)
+        "d_skip": ParamSpec((h,), (None,), init="ones"),
+        "conv_x": ParamSpec((cfg.ssm_conv, di), (None, "mlp"), scale=1.0),
+        "norm": rmsnorm_spec(di),
+        "out": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jax.Array         # (L?, B, heads, P, N) recurrent state
+    conv: jax.Array      # (L?, B, conv_width-1, d_inner) conv tail
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype, num_layers: int | None = None):
+    h = (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+    c = (batch, cfg.ssm_conv - 1, cfg.d_inner)
+    if num_layers is not None:
+        h = (num_layers, *h)
+        c = (num_layers, *c)
+    return SSMState(h=jnp.zeros(h, jnp.float32), conv=jnp.zeros(c, dtype))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv over (B, S, di); w: (width, di)."""
+    width = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    new_tail = xp[:, -(width - 1):] if width > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def _ssd_chunked(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)    softplus'd step
+    a: jax.Array,    # (H,)         negative decay rate
+    bmat: jax.Array, # (B, S, N)
+    cmat: jax.Array, # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, H, P, N)
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    b, s, nh, p = x.shape
+    n = bmat.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by ssm_chunk {chunk}")
+    nc = s // chunk
+
+    xr = x.reshape(b, nc, chunk, nh, p)
+    dtr = dt.reshape(b, nc, chunk, nh)
+    br = bmat.reshape(b, nc, chunk, n)
+    cr = cmat.reshape(b, nc, chunk, n)
+
+    # log-decay within chunk: lam[t] = sum_{u<=t} dt_u * a  (per head)
+    da = dtr * a[None, None, None, :]                  # (b,nc,l,h) negative
+    cum = jnp.cumsum(da, axis=2)                       # inclusive
+    total = cum[:, :, -1:, :]                          # (b,nc,1,h)
+
+    # intra-chunk (causal "attention" with decay weights):
+    # w[t,u] = exp(cum[t] - cum[u]) for u <= t
+    wlog = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b,nc,t,u,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    wmat = jnp.where(tri[None, None, :, :, None], jnp.exp(wlog), 0.0)
+    scores = jnp.einsum("bltn,blun->bltu", cr, br)            # (b,nc,t,u)
+    gated = scores[..., None] * wmat * dtr[:, :, None, :, :]  # (b,nc,t,u,h)
+    y_intra = jnp.einsum("bltuh,bluhp->blthp", gated, xr)
+
+    # per-chunk state contribution: sum_u exp(total - cum[u]) dt_u B_u x_u
+    decay_to_end = jnp.exp(total - cum)                       # (b,nc,l,h)
+    state_in = jnp.einsum("blth,bltn,blthp->blhpn", decay_to_end * dtr, br, xr)
+
+    chunk_decay = jnp.exp(total.squeeze(2))                   # (b,nc,h)
+
+    def carry_fn(h, inputs):
+        s_in, dec = inputs                                    # (b,h,p,n), (b,h)
+        h_new = h * dec[..., None, None] + s_in
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        carry_fn,
+        h0.astype(jnp.float32),
+        (jnp.moveaxis(state_in.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay.astype(jnp.float32), 1, 0)),
+        unroll=True if unroll else 1,
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                       # (b,nc,h,p,n)
+
+    # inter-chunk: y_t += C_t · (exp(cum[t]) ⊙ h_prev_chunk)
+    y_inter = jnp.einsum(
+        "bltn,blth,blhpn->blthp", cr, jnp.exp(cum), h_prev.astype(cr.dtype)
+    )
+    y = (y_intra + y_inter).reshape(b, s, nh, p)
+    return y, h_final
+
+
+def mamba2_block(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence Mamba2 mixing. Returns (out, (h_final, conv_tail))."""
+    b, s, _ = x.shape
+    nh, p = cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    conv_tail = None if state is None else state[1]
+    xs, new_tail = _causal_conv(xs, params["conv_x"], conv_tail)
+
+    bmat = jnp.einsum("bsd,dn->bsn", x, params["in_b"]).astype(jnp.float32)
+    cmat = jnp.einsum("bsd,dn->bsn", x, params["in_c"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, s, nh, p)
+    h0 = None if state is None else state[0]
+    y, h_final = _ssd_chunked(
+        xh.astype(jnp.float32), dt, a, bmat, cmat, cfg.ssm_chunk, h0,
+        unroll=cfg.scan_unroll,
+    )
+    y = y + xh.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, nh * p).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out"])
+    return out, (h_final, new_tail)
+
+
+def mamba2_decode_step(
+    params: Mapping[str, Any],
+    x: jax.Array,                       # (B, 1, d)
+    cfg: ModelConfig,
+    h: jax.Array,                       # (B, H, P, N)
+    conv_tail: jax.Array,               # (B, conv-1, di)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) single-token update."""
+    b = x.shape[0]
+    nh, p = cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    xs, new_tail = _causal_conv(xs, params["conv_x"], conv_tail)
+
+    bmat = jnp.einsum("bsd,dn->bsn", x, params["in_b"]).astype(jnp.float32)[:, 0]
+    cmat = jnp.einsum("bsd,dn->bsn", x, params["in_c"]).astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["in_dt"]).astype(jnp.float32)[:, 0]
+        + params["dt_bias"].astype(jnp.float32)
+    )                                                     # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, nh, p).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                      # (B, H)
+    h_new = h * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bmat, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat, h_new)
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, nh * p).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out"])
+    return out, h_new, new_tail

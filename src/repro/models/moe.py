@@ -1,0 +1,109 @@
+"""Mixture-of-Experts with fixed-capacity grouped-einsum dispatch.
+
+Static shapes everywhere (the framework's thesis — see DESIGN.md §2): the
+data-dependent quantity in MoE is *expert load*, the direct analogue of the
+paper's proposal-count variance source.  We keep the compute shape static
+with capacity-``C`` dispatch tensors and surface the data dependence as a
+*metric* (``drop_fraction``) instead of letting it become a *latency* term.
+
+Dispatch layout: tokens are reshaped to ``(G groups, tokens_per_group)``;
+the dispatch/combine tensors are ``(G, t, E, C)`` with
+``C = ceil(t·k/E · capacity_factor)``.  ``tokens_per_group`` trades dispatch
+memory against drop probability — a first-class §Perf knob
+(``cfg.moe_group_size``).
+
+Sharding: G follows the batch (data axes); the expert dim follows ``model``
+(expert parallelism) — XLA inserts the token all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .params import ParamSpec
+
+__all__ = ["moe_specs", "moe_block", "expert_capacity"]
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None), scale=0.5),
+        "gate": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "up": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "down": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def expert_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    raw = tokens_per_group * cfg.num_experts_per_tok / cfg.num_experts
+    cap = int(math.ceil(raw * cfg.capacity_factor))
+    return max(4, -(-cap // 4) * 4)  # round up to a multiple of 4, ≥ 4
+
+
+def moe_block(
+    params: Mapping[str, Any], x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """x: (B, S, d) → (B, S, d), plus aux metrics/losses.
+
+    aux = {load_balance_loss, router_z_loss, drop_fraction}
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t_total = b * s
+    tpg = min(cfg.moe_group_size, t_total)
+    if t_total % tpg:
+        # shrink to a divisor (decode batches are small and arbitrary)
+        while t_total % tpg:
+            tpg -= 1
+    g = t_total // tpg
+    cap = expert_capacity(tpg, cfg)
+
+    xt = x.reshape(g, tpg, d)
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    top_w, top_ids = jax.lax.top_k(probs, k)               # (g, t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    oh = jax.nn.one_hot(top_ids, e, dtype=jnp.int32)        # (g, t, k, e)
+    oh_flat = oh.reshape(g, tpg * k, e)
+    pos_flat = jnp.cumsum(oh_flat, axis=1) - 1              # (g, t*k, e)
+    pos = (pos_flat.reshape(g, tpg, k, e) * oh).sum(-1)     # (g, t, k)
+    keep = (pos < cap) & (top_w > 0)
+
+    slot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=x.dtype)  # (g,t,k,C)
+    ohf = oh.astype(x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", ohf, slot)                   # (g,t,e,C)
+    combine = jnp.einsum(
+        "gtke,gtkc,gtk->gtec", ohf, slot, top_w.astype(x.dtype)
+    )
+
+    # expert compute (static shapes)
+    ex_in = jnp.einsum("gtec,gtd->egcd", dispatch, xt)      # (e,g,C,d)
+    h_gate = jnp.einsum("egcd,edf->egcf", ex_in, params["gate"])
+    h_up = jnp.einsum("egcd,edf->egcf", ex_in, params["up"])
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(x.dtype) * h_up
+    # down-projection and combine expressed as ONE contraction: the TP
+    # all-reduce (partial sums over the sharded f dim) can then land on the
+    # (g,t,d) output instead of the e×-larger (e,g,C,d) intermediate (§Perf)
+    out = jnp.einsum("egcf,efd,gtec->gtd", h, params["down"], combine)
+
+    # aux: switch-style load-balance loss, router z-loss, drop fraction
+    per_expert_frac = oh.astype(jnp.float32).sum(axis=2).mean(axis=1)  # (g, e)
+    per_expert_prob = probs.mean(axis=1)                               # (g, e)
+    lb_loss = e * jnp.mean(jnp.sum(per_expert_frac * per_expert_prob, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    drop_fraction = 1.0 - keep.astype(jnp.float32).mean()
+
+    aux = {
+        "load_balance_loss": lb_loss,
+        "router_z_loss": z_loss,
+        "drop_fraction": drop_fraction,
+    }
+    return out.reshape(b, s, d), aux

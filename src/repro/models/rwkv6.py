@@ -1,0 +1,301 @@
+"""RWKV6 "Finch" [arXiv:2404.05892] — attention-free time mixing with
+*data-dependent decay*, plus the RWKV channel-mix FFN.
+
+Recurrence per head (dk = dv = head width), with decay vector w_t ∈ (0,1)^dk
+computed from the input (the v6 hallmark: low-rank data-dependent decay):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Train/prefill use the chunked parallel form (pairwise intra-chunk decay —
+numerically safe, no exp of positive sums — plus an inter-chunk state scan).
+Decode is the O(1) recurrence.  ``rwkv6_recurrent`` is the step-by-step
+oracle used by tests and as the Pallas kernel reference.
+
+Simplifications vs the released model (documented in DESIGN.md §6): static
+token-shift interpolation (v6 uses a data-dependent lerp) and per-head
+RMSNorm instead of GroupNorm.  The compute/communication structure — the
+part that matters for latency variation and roofline — is preserved.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .params import ParamSpec
+from .layers import rmsnorm_spec, rmsnorm
+
+__all__ = [
+    "rwkv6_specs",
+    "rwkv6_block",
+    "rwkv6_decode_step",
+    "rwkv6_recurrent",
+    "RWKVState",
+    "init_rwkv_state",
+]
+
+DECAY_LORA = 64
+
+
+def rwkv6_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads if cfg.num_heads else d // cfg.ssm_head_dim
+    dk = d // h
+    f = cfg.d_ff
+    return {
+        "time": {
+            "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_v": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_g": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_w": ParamSpec((d,), ("embed",), init="zeros"),
+            "wr": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "wk": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "wv": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "wg": ParamSpec((d, d), ("embed", "mlp")),
+            "w_base": ParamSpec((h, dk), ("heads", "head_dim"), init="zeros"),
+            "w_lora_a": ParamSpec((d, DECAY_LORA), ("embed", None)),
+            "w_lora_b": ParamSpec((DECAY_LORA, h, dk), (None, "heads", "head_dim")),
+            "bonus_u": ParamSpec((h, dk), ("heads", "head_dim"), init="zeros"),
+            "ln_out": rmsnorm_spec(d),
+            "wo": ParamSpec((d, d), ("mlp", "embed")),
+        },
+        "ln1": rmsnorm_spec(d),
+        "ln2": rmsnorm_spec(d),
+        "channel": {
+            "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+            "wk": ParamSpec((d, f), ("embed", "mlp")),
+            "wv": ParamSpec((f, d), ("mlp", "embed")),
+            "wr": ParamSpec((d, d), ("embed", "mlp")),
+        },
+    }
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array        # (L?, B, H, dk, dv) wkv state
+    shift_t: jax.Array  # (L?, B, d) last token for time-mix shift
+    shift_c: jax.Array  # (L?, B, d) last token for channel-mix shift
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype, num_layers: int | None = None):
+    h = cfg.num_heads
+    dk = cfg.d_model // h
+    s = (batch, h, dk, dk)
+    sh = (batch, cfg.d_model)
+    if num_layers is not None:
+        s = (num_layers, *s)
+        sh = (num_layers, *sh)
+    return RWKVState(
+        s=jnp.zeros(s, jnp.float32),
+        shift_t=jnp.zeros(sh, dtype),
+        shift_c=jnp.zeros(sh, dtype),
+    )
+
+
+def _token_shift(x: jax.Array, mu: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """lerp(x_{t-1}, x_t, sigmoid-free mix): x + mu ⊙ (shift(x) - x)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None].astype(x.dtype)
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return x + mu * (xs - x)
+
+
+def _decay(params: Mapping[str, Any], xw: jax.Array) -> jax.Array:
+    """log w_t ∈ (-inf, 0): data-dependent decay (low-rank + base)."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, params["w_lora_a"])
+    lora = jnp.tanh(lora.astype(jnp.float32))
+    wraw = params["w_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rhk->bshk", lora, params["w_lora_b"].astype(jnp.float32)
+    )
+    # w = exp(-softplus(wraw)) keeps log-decay in (-inf, 0) smoothly
+    return -jax.nn.softplus(wraw)
+
+
+def _project(params, x, mu_key, prev, wname):
+    xm = _token_shift(x, params[mu_key], prev)
+    return jnp.einsum("bsd,dhk->bshk", xm, params[wname])
+
+
+def _wkv_chunked(
+    r: jax.Array,      # (B,S,H,K) f32
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,   # (B,S,H,K) f32, ≤ 0
+    u: jax.Array,      # (H,K)
+    chunk: int,
+    s0: jax.Array,     # (B,H,K,K) f32
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, s, h, dk = r.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+    rc = r.reshape(b, nc, chunk, h, dk)
+    kc = k.reshape(b, nc, chunk, h, dk)
+    vc = v.reshape(b, nc, chunk, h, dk)
+    lw = logw.reshape(b, nc, chunk, h, dk)
+
+    cum = jnp.cumsum(lw, axis=2)                     # inclusive prefix sums
+    total = cum[:, :, -1]                            # (b,nc,h,k)
+
+    # intra-chunk pairwise decay: pair[t,u] = exp(cum[t-1] - cum[u]) for u<t
+    cum_tm1 = jnp.concatenate([jnp.zeros_like(cum[:, :, :1]), cum[:, :, :-1]], axis=2)
+    pair = cum_tm1[:, :, :, None] - cum[:, :, None, :, :]        # (b,nc,t,u,h,k)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    pair = jnp.where(tri[None, None, :, :, None, None], jnp.exp(pair), 0.0)
+    amat = jnp.einsum("blthk,bluhk,bltuhk->bltuh", rc, kc, pair)
+    # diagonal bonus term
+    diag = jnp.einsum("blthk,hk,blthk->blth", rc, u, kc)
+    y_intra = jnp.einsum("bltuh,bluhk->blthk", amat, vc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: y_t += r_t diag(exp(cum[t-1])) S_chunk_start
+    k_to_end = jnp.exp(total[:, :, None] - cum) * kc             # decay k to chunk end
+    state_in = jnp.einsum("bluhk,bluhj->blhkj", k_to_end, vc)    # (b,nc,h,k,kv)
+    chunk_decay = jnp.exp(total)                                 # (b,nc,h,k)
+
+    def carry(sprev, inputs):
+        s_in, dec = inputs
+        s_new = sprev * dec[..., None] + s_in
+        return s_new, sprev
+
+    s_final, s_starts = jax.lax.scan(
+        carry,
+        s0,
+        (jnp.moveaxis(state_in, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=True if unroll else 1,
+    )
+    s_starts = jnp.moveaxis(s_starts, 0, 1)                      # (b,nc,h,k,kv)
+    y_inter = jnp.einsum(
+        "blthk,blhkj->blthj", rc * jnp.exp(cum_tm1), s_starts
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, dk)
+    return y, s_final
+
+
+def rwkv6_recurrent(r, k, v, logw, u, s0):
+    """Step-by-step oracle (tests / Pallas reference). Shapes as chunked."""
+    def step(s, inputs):
+        rt, kt, vt, lwt = inputs                     # (B,H,K) each
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,K,KV)
+        y = jnp.einsum("bhk,bhkj->bhj", rt, s + u[None, :, :, None] * kv)
+        s_new = s * jnp.exp(lwt)[..., None] + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_final
+
+
+def rwkv6_time_mix(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array] | None = None,  # (s0, shift_prev)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dk = d // h
+    prev = None if state is None else state[1]
+
+    r = _project(params, x, "mu_r", prev, "wr").astype(jnp.float32)
+    k = _project(params, x, "mu_k", prev, "wk").astype(jnp.float32)
+    v = _project(params, x, "mu_v", prev, "wv").astype(jnp.float32)
+    xg = _token_shift(x, params["mu_g"], prev)
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"])
+    xw = _token_shift(x, params["mu_w"], prev)
+    logw = _decay(params, xw)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    s0 = (
+        jnp.zeros((b, h, dk, dk), jnp.float32) if state is None else state[0]
+    )
+    chunk = min(cfg.ssm_chunk, s) if s >= 2 else 1
+    while s % chunk:
+        chunk -= 1
+    y, s_final = _wkv_chunked(r, k, v, logw, u, chunk, s0, unroll=cfg.scan_unroll)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(params["ln_out"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    return out, s_final, x[:, -1]
+
+
+def rwkv6_channel_mix(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    prev: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    xk = _token_shift(x, params["mu_k"], prev)
+    xr = _token_shift(x, params["mu_r"], prev)
+    kk = jnp.einsum("bsd,df->bsf", xk, params["wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["wv"])
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, params["wr"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    return rr * vv, x[:, -1]
+
+
+def rwkv6_block(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: RWKVState | None = None,
+) -> tuple[jax.Array, RWKVState]:
+    """One RWKV6 layer: pre-norm time mix + pre-norm channel mix, residuals
+    managed internally (token-shift states live on the *normed* streams)."""
+    xn = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    st = None if state is None else (state.s, state.shift_t)
+    t_out, s_new, shift_t = rwkv6_time_mix(params["time"], xn, cfg, st)
+    x = x + t_out
+    xn2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    prev_c = None if state is None else state.shift_c
+    c_out, shift_c = rwkv6_channel_mix(params["channel"], xn2, prev_c)
+    x = x + c_out
+    return x, RWKVState(s=s_new, shift_t=shift_t, shift_c=shift_c)
+
+
+def rwkv6_decode_step(
+    params: Mapping[str, Any],
+    x: jax.Array,             # (B, 1, d)
+    cfg: ModelConfig,
+    state: RWKVState,
+) -> tuple[jax.Array, RWKVState]:
+    """O(1) decode: same math at seq=1 via the recurrent form."""
+    b, _, d = x.shape
+    h = cfg.num_heads
+    tp = params["time"]
+    prev = state.shift_t
+    xn = rmsnorm(params["ln1"], x, cfg.norm_eps)
+
+    r = _project(tp, xn, "mu_r", prev, "wr").astype(jnp.float32)[:, 0]
+    k = _project(tp, xn, "mu_k", prev, "wk").astype(jnp.float32)[:, 0]
+    v = _project(tp, xn, "mu_v", prev, "wv").astype(jnp.float32)[:, 0]
+    xg = _token_shift(xn, tp["mu_g"], prev)
+    g = jnp.einsum("bsd,de->bse", xg, tp["wg"])
+    xw = _token_shift(xn, tp["mu_w"], prev)
+    logw = _decay(tp, xw)[:, 0]
+    u = tp["bonus_u"].astype(jnp.float32)
+
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkj->bhj", r, state.s + u[None, :, :, None] * kv)
+    s_new = state.s * jnp.exp(logw)[..., None] + kv
+
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm(tp["ln_out"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    t_out = jnp.einsum("bse,ed->bsd", y, tp["wo"])
+    x1 = x + t_out
+
+    xn2 = rmsnorm(params["ln2"], x1, cfg.norm_eps)
+    c_out, shift_c = rwkv6_channel_mix(params["channel"], xn2, state.shift_c)
+    x2 = x1 + c_out
+    return x2, RWKVState(s=s_new, shift_t=xn[:, -1], shift_c=shift_c)

@@ -1,0 +1,471 @@
+"""Composable model stacks for every assigned family.
+
+A ``Model`` wraps a ``ModelConfig`` and exposes the functional API used by
+the trainer, the serving engine, and the dry-run:
+
+    init(key)                       → params pytree (layer-stacked weights)
+    axes()                          → logical-axis pytree (for sharding)
+    forward(params, batch)          → (logits, aux)           [train/prefill]
+    loss(params, batch)             → (scalar, metrics)
+    init_decode_state(batch, ctx)   → DecodeState
+    decode_step(params, state, tok) → (logits, DecodeState)   [serving]
+
+Layer stacks are ``lax.scan`` over stacked weights (small HLO — essential
+for 50+-layer dry-runs), with optional ``jax.checkpoint`` remat.  The hybrid
+(Zamba2) stack is a scan over *groups*: ``attn_every`` Mamba2 layers + one
+application of the *shared* attention block (shared weights, per-site KV
+cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .params import ParamSpec, axes_tree, init_params, stack_specs, count_params
+from . import layers as L
+from .attention import (
+    KVCache,
+    attention_block,
+    attention_specs,
+    decode_attention_block,
+    init_kv_cache,
+)
+from .mamba2 import (
+    SSMState,
+    init_ssm_state,
+    mamba2_block,
+    mamba2_decode_step,
+    mamba2_specs,
+)
+from .moe import moe_block, moe_specs
+from .rwkv6 import (
+    RWKVState,
+    init_rwkv_state,
+    rwkv6_block,
+    rwkv6_decode_step,
+    rwkv6_specs,
+)
+
+__all__ = ["Model", "DecodeState"]
+
+
+class DecodeState(NamedTuple):
+    """Union decode state; unused fields are empty pytrees ({})."""
+    kv: Any          # KVCache or {}
+    ssm: Any         # SSMState or {}
+    rwkv: Any        # RWKVState or {}
+
+
+def _tree_mean(tree):
+    return jax.tree.map(lambda a: jnp.mean(a), tree)
+
+
+def _u(cfg: ModelConfig):
+    """lax.scan unroll argument from the config (analysis mode)."""
+    return True if cfg.scan_unroll else 1
+
+
+def _decode_window(cfg: ModelConfig, capacity: int) -> Optional[int]:
+    """Window to apply during decode, derived from the cache capacity.
+
+    A cache whose capacity equals the arch's SWA window or the long-context
+    variant window is a ring buffer — attention must mask to the window.  A
+    full-context cache needs no window mask."""
+    if cfg.sliding_window is not None and capacity <= cfg.sliding_window:
+        return cfg.sliding_window
+    if cfg.long_context_window is not None and capacity == cfg.long_context_window:
+        return cfg.long_context_window
+    return None
+
+
+# --------------------------------------------------------------------------
+# per-family layer definitions
+# --------------------------------------------------------------------------
+
+def _dense_layer_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "attn": attention_specs(cfg),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = moe_specs(cfg)
+    else:
+        specs["mlp"] = L.mlp_specs(cfg)
+    return specs
+
+
+def _dense_layer(cfg, lp, x, positions, causal, window):
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    x = x + attention_block(lp["attn"], h, cfg, positions, causal, window)
+    h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_block(lp["moe"], h, cfg)
+    else:
+        y, aux = L.mlp(lp["mlp"], h), {}
+    return x + y, aux
+
+
+def _dense_decode_layer(cfg, lp, x, kc, vc, cache_pos, next_pos, window):
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    attn_out, kc, vc = decode_attention_block(
+        lp["attn"], h, cfg, kc, vc, cache_pos, next_pos, window
+    )
+    x = x + attn_out
+    h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe_block(lp["moe"], h, cfg)
+    else:
+        y = L.mlp(lp["mlp"], h)
+    return x + y, kc, vc
+
+
+def _mamba_layer_specs(cfg: ModelConfig) -> dict:
+    return {"ln": L.rmsnorm_spec(cfg.d_model), "mixer": mamba2_specs(cfg)}
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- specs ----------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {"final_ln": L.rmsnorm_spec(cfg.d_model)}
+
+        if cfg.family == "audio":
+            specs["frontend_proj"] = ParamSpec(
+                (cfg.frontend_dim, cfg.d_model), (None, "embed")
+            )
+            # positions are sinusoidal (length-free; HuBERT's conv positional
+            # encoding is part of the stubbed frontend)
+        else:
+            specs["embed"] = L.embed_specs(cfg)
+        if cfg.family == "vlm":
+            specs["projector"] = {
+                "w1": ParamSpec((cfg.frontend_dim, cfg.d_model), (None, "embed")),
+                "w2": ParamSpec((cfg.d_model, cfg.d_model), ("embed", "embed")),
+            }
+        specs["lm_head"] = {
+            "table": ParamSpec(
+                (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0
+            )
+        }
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            specs["layers"] = stack_specs(_dense_layer_specs(cfg), cfg.num_layers)
+        elif cfg.family == "ssm":
+            specs["layers"] = stack_specs(rwkv6_specs(cfg), cfg.num_layers)
+        elif cfg.family == "hybrid":
+            n_sites = cfg.num_layers // cfg.attn_every
+            group = stack_specs(_mamba_layer_specs(cfg), cfg.attn_every)
+            specs["layers"] = stack_specs(group, n_sites)
+            # Zamba2's shared block is a full transformer block (attn+MLP)
+            specs["shared_attn"] = {
+                "ln": L.rmsnorm_spec(cfg.d_model),
+                "attn": attention_specs(cfg),
+                "ln2": L.rmsnorm_spec(cfg.d_model),
+                "mlp": L.mlp_specs(cfg),
+            }
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+        return specs
+
+    def init(self, key: jax.Array):
+        dtype = jnp.dtype(self.cfg.param_dtype)
+        return init_params(self.specs(), key, dtype)
+
+    def axes(self):
+        return axes_tree(self.specs())
+
+    def num_params(self, params=None) -> int:
+        from .params import count_params_from_specs
+        if params is not None:
+            return count_params(params)
+        return count_params_from_specs(self.specs())
+
+    # ---------------- embedding / head ----------------
+    def _embed_inputs(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Returns (hidden (B,S,d), positions (S,))."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.family == "audio":
+            x = jnp.einsum(
+                "bsf,fd->bsd", batch["frames"].astype(dtype), params["frontend_proj"]
+            )
+            s = x.shape[1]
+            half = cfg.d_model // 2
+            freqs = 1.0 / (1e4 ** (jnp.arange(half, dtype=jnp.float32) / half))
+            ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe[None].astype(dtype)
+        elif cfg.family == "vlm":
+            txt = L.embed(params["embed"], batch["tokens"]).astype(dtype)
+            img = batch["patch_embeds"].astype(dtype)
+            img = jnp.einsum("bpf,fd->bpd", img, params["projector"]["w1"])
+            img = jax.nn.gelu(img.astype(jnp.float32)).astype(dtype)
+            img = jnp.einsum("bpd,de->bpe", img, params["projector"]["w2"])
+            x = jnp.concatenate([img, txt], axis=1)
+        else:
+            x = L.embed(params["embed"], batch["tokens"]).astype(dtype)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        return x, positions
+
+    def _head(self, params, x, *, sliced: bool = True) -> jax.Array:
+        """Vocab logits; padded columns masked to -1e9.  ``sliced=True``
+        returns exactly vocab_size columns (public API); internal chunked-CE
+        keeps the padded width for sharding."""
+        cfg = self.cfg
+        x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        logits = L.unembed(params["lm_head"], x)
+        if cfg.padded_vocab != cfg.vocab_size:
+            mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(mask, logits, -1e9)
+            if sliced:
+                logits = logits[..., : cfg.vocab_size]
+        return logits
+
+    def _chunked_ce(self, params, hidden, targets, mask=None) -> jax.Array:
+        """Cross-entropy over (B, S) targets from (B, S, d) hidden states,
+        computed in sequence chunks so the full (B, S, V) f32 logits tensor
+        is never live (the dry-run's temp-memory budget depends on this)."""
+        cfg = self.cfg
+        b, s, d = hidden.shape
+        chunk = cfg.loss_chunk if cfg.loss_chunk and s > cfg.loss_chunk else s
+        while s % chunk:
+            chunk -= 1
+        nc = s // chunk
+        hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            h, t, m = inp
+            logits = self._head(params, h, sliced=False).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+            nll = (lse - picked) * m
+            return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hc, tc, mc), unroll=_u(cfg))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ---------------- forward (train / prefill) ----------------
+    def _hidden(self, params, batch) -> tuple[jax.Array, dict]:
+        """Final pre-head hidden states (B, S, d) + aux losses."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        causal = not cfg.encoder_only
+        window = cfg.effective_window(x.shape[1])
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            def body(h, lp):
+                h, aux = _dense_layer(cfg, lp, h, positions, causal, window)
+                return h, aux
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, auxs = jax.lax.scan(body, x, params["layers"], unroll=_u(cfg))
+            aux = _tree_mean(auxs) if auxs else {}
+
+        elif cfg.family == "ssm":
+            def body(h, lp):
+                h, _ = rwkv6_block(lp, h, cfg, state=None)
+                return h, {}
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["layers"], unroll=_u(cfg))
+            aux = {}
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def site(h, site_params):
+                def mamba_body(hh, lp):
+                    z = L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+                    out, _ = mamba2_block(lp["mixer"], z, cfg, state=None)
+                    return hh + out, None
+                h, _ = jax.lax.scan(mamba_body, h, site_params, unroll=_u(cfg))
+                z = L.rmsnorm(shared["ln"], h, cfg.norm_eps)
+                h = h + attention_block(shared["attn"], z, cfg, positions, causal, window)
+                z = L.rmsnorm(shared["ln2"], h, cfg.norm_eps)
+                h = h + L.mlp(shared["mlp"], z)
+                return h, {}
+
+            if cfg.remat:
+                site = jax.checkpoint(site)
+            x, _ = jax.lax.scan(site, x, params["layers"], unroll=_u(cfg))
+            aux = {}
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+        return x, aux
+
+    def forward(self, params, batch) -> tuple[jax.Array, dict]:
+        """Full logits (B, S, vocab_size) — tests / small-scale use.  Large
+        production paths use ``loss`` (chunked CE) or ``prefill``/``decode``
+        (last-position only); those never materialize (B, S, V) f32."""
+        x, aux = self._hidden(params, batch)
+        return self._head(params, x), aux
+
+    def prefill(self, params, batch) -> jax.Array:
+        """Next-token logits for the final position only (B, vocab)."""
+        x, _ = self._hidden(params, batch)
+        return self._head(params, x[:, -1:, :])[:, 0]
+
+    # ---------------- loss ----------------
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        hidden, aux = self._hidden(params, batch)
+
+        if cfg.encoder_only:
+            labels = batch["labels"]                  # (B,S), -1 = unmasked
+            mask = (labels >= 0).astype(jnp.float32)
+            tgt = jnp.maximum(labels, 0)
+            ce = self._chunked_ce(params, hidden, tgt, mask)
+        else:
+            tokens = batch["tokens"]
+            if cfg.family == "vlm":
+                # predict text tokens only; hidden covers [img; txt]
+                n_img = batch["patch_embeds"].shape[1]
+                hidden = hidden[:, n_img:, :]
+            ce = self._chunked_ce(params, hidden[:, :-1], tokens[:, 1:])
+
+        total = ce
+        metrics = {"ce": ce}
+        if "load_balance_loss" in aux:
+            total = total + 0.01 * aux["load_balance_loss"] + 1e-3 * aux["router_z_loss"]
+            metrics.update(aux)
+        metrics["loss"] = total
+        return total, metrics
+
+    # ---------------- decode ----------------
+    def n_attn_sites(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return cfg.num_layers // cfg.attn_every
+        if cfg.family == "ssm":
+            return 0
+        return cfg.num_layers
+
+    def init_decode_state(self, batch: int, context: int) -> DecodeState:
+        cfg = self.cfg
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        dtype = jnp.dtype(cfg.dtype)
+        kv: Any = {}
+        ssm: Any = {}
+        rwkv: Any = {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            kv = init_kv_cache(cfg, batch, context, dtype, cfg.num_layers)
+        elif cfg.family == "hybrid":
+            kv = init_kv_cache(cfg, batch, context, dtype, self.n_attn_sites())
+            ssm = init_ssm_state(cfg, batch, dtype, cfg.num_layers)
+        elif cfg.family == "ssm":
+            rwkv = init_rwkv_state(cfg, batch, dtype, cfg.num_layers)
+        return DecodeState(kv=kv, ssm=ssm, rwkv=rwkv)
+
+    def decode_step(
+        self, params, state: DecodeState, tokens: jax.Array
+    ) -> tuple[jax.Array, DecodeState]:
+        """tokens: (B,) int32 — one new token per sequence."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed(params["embed"], tokens[:, None]).astype(dtype)  # (B,1,d)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            cache: KVCache = state.kv
+            window = _decode_window(cfg, int(cache.positions.shape[0]))
+
+            def body(h, inputs):
+                lp, kc, vc = inputs
+                h, kc, vc = _dense_decode_layer(
+                    cfg, lp, h, kc, vc, cache.positions, cache.next_pos, window
+                )
+                return h, (kc, vc)
+
+            x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v), unroll=_u(cfg))
+            slot = cache.next_pos % cache.positions.shape[0]
+            new_cache = KVCache(
+                k=ks,
+                v=vs,
+                positions=cache.positions.at[slot].set(cache.next_pos),
+                next_pos=cache.next_pos + 1,
+            )
+            state = state._replace(kv=new_cache)
+
+        elif cfg.family == "ssm":
+            rwkv: RWKVState = state.rwkv
+
+            def body(h, inputs):
+                lp, st = inputs
+                h, st_new = rwkv6_decode_step(lp, h, cfg, st)
+                return h, st_new
+
+            x, new_states = jax.lax.scan(
+                body, x, (params["layers"], rwkv), unroll=_u(cfg)
+            )
+            state = state._replace(rwkv=new_states)
+
+        elif cfg.family == "hybrid":
+            cache: KVCache = state.kv
+            ssm: SSMState = state.ssm
+            shared = params["shared_attn"]
+            window = _decode_window(cfg, int(cache.positions.shape[0]))
+            n_sites = self.n_attn_sites()
+            k_ae = cfg.attn_every
+
+            # reshape ssm state leaves to (sites, attn_every, ...)
+            hs = ssm.h.reshape(n_sites, k_ae, *ssm.h.shape[1:])
+            cs = ssm.conv.reshape(n_sites, k_ae, *ssm.conv.shape[1:])
+
+            def site_body(h, inputs):
+                site_params, h_states, c_states, kc, vc = inputs
+
+                def mamba_body(hh, inner):
+                    lp, hst, cst = inner
+                    z = L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+                    out, h_new, c_new = mamba2_decode_step(lp["mixer"], z, cfg, hst, cst)
+                    return hh + out, (h_new, c_new)
+
+                h, (h_new, c_new) = jax.lax.scan(
+                    mamba_body, h, (site_params, h_states, c_states), unroll=_u(cfg)
+                )
+                z = L.rmsnorm(shared["ln"], h, cfg.norm_eps)
+                attn_out, kc, vc = decode_attention_block(
+                    shared["attn"], z, cfg, kc, vc, cache.positions, cache.next_pos, window
+                )
+                h = h + attn_out
+                z = L.rmsnorm(shared["ln2"], h, cfg.norm_eps)
+                h = h + L.mlp(shared["mlp"], z)
+                return h, (h_new, c_new, kc, vc)
+
+            x, (h_new, c_new, ks, vs) = jax.lax.scan(
+                site_body, x, (params["layers"], hs, cs, cache.k, cache.v), unroll=_u(cfg)
+            )
+            slot = cache.next_pos % cache.positions.shape[0]
+            state = state._replace(
+                kv=KVCache(
+                    k=ks,
+                    v=vs,
+                    positions=cache.positions.at[slot].set(cache.next_pos),
+                    next_pos=cache.next_pos + 1,
+                ),
+                ssm=SSMState(
+                    h=h_new.reshape(-1, *h_new.shape[2:]),
+                    conv=c_new.reshape(-1, *c_new.shape[2:]),
+                ),
+            )
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+
+        logits = self._head(params, x)[:, 0]   # (B, vocab)
+        return logits, state

@@ -1,0 +1,19 @@
+"""AV perception pipelines: synthetic scenes, detectors, lanes, fusion."""
+from .data import SCENARIOS, Scene, SceneConfig, generate_scene, scene_stream
+from .detector import OneStageDetector, TwoStageDetector, dynamic_nms, static_nms
+from .lane import LaneDetector
+from .fusion import ApproxTimeSynchronizer, FusionEvent
+from .pipelines import (
+    preprocess,
+    run_lane,
+    run_lane_static,
+    run_one_stage,
+    run_two_stage,
+)
+
+__all__ = [
+    "SCENARIOS", "Scene", "SceneConfig", "generate_scene", "scene_stream",
+    "OneStageDetector", "TwoStageDetector", "dynamic_nms", "static_nms",
+    "LaneDetector", "ApproxTimeSynchronizer", "FusionEvent",
+    "preprocess", "run_lane", "run_lane_static", "run_one_stage", "run_two_stage",
+]

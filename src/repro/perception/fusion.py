@@ -1,0 +1,74 @@
+"""Approximate-time message synchronizer (paper §IV-C, Insight 6).
+
+Mirrors ROS ``message_filters.ApproximateTimeSynchronizer``: one queue per
+topic (size Q); whenever every topic holds at least one message, the
+earliest candidate set whose stamp spread ≤ slop is emitted.  Queue size is
+the paper's Fig. 17 knob: larger queues damp fusion-delay variance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ApproxTimeSynchronizer", "FusionEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionEvent:
+    stamp: float                 # representative (earliest) source stamp
+    emitted_at: float
+    stamps: dict[str, float]
+
+    @property
+    def delay(self) -> float:
+        return self.emitted_at - self.stamp
+
+
+class ApproxTimeSynchronizer:
+    def __init__(self, topics: list[str], queue_size: int = 100, slop: float = 0.1):
+        self.topics = list(topics)
+        self.queue_size = queue_size
+        self.slop = slop
+        self.queues: dict[str, list[tuple[float, object]]] = {t: [] for t in topics}
+        self.events: list[FusionEvent] = []
+        self.dropped = 0
+
+    def add(self, topic: str, stamp: float, payload, now: float) -> Optional[FusionEvent]:
+        q = self.queues[topic]
+        if len(q) >= self.queue_size:
+            q.pop(0)
+            self.dropped += 1
+        q.append((stamp, payload))
+        return self._try_emit(now)
+
+    def _try_emit(self, now: float) -> Optional[FusionEvent]:
+        if any(not q for q in self.queues.values()):
+            return None
+        # candidate: the set minimizing stamp spread, greedily from heads
+        best = None
+        for s0, _ in self.queues[self.topics[0]]:
+            stamps = {self.topics[0]: s0}
+            ok = True
+            for t in self.topics[1:]:
+                # nearest stamp in t's queue
+                near = min(self.queues[t], key=lambda sp: abs(sp[0] - s0))
+                if abs(near[0] - s0) > self.slop:
+                    ok = False
+                    break
+                stamps[t] = near[0]
+            if ok:
+                spread = max(stamps.values()) - min(stamps.values())
+                if best is None or spread < best[0]:
+                    best = (spread, stamps)
+        if best is None:
+            return None
+        _, stamps = best
+        # pop everything at or before the matched stamps
+        for t in self.topics:
+            self.queues[t] = [sp for sp in self.queues[t] if sp[0] > stamps[t]]
+        ev = FusionEvent(stamp=min(stamps.values()), emitted_at=now, stamps=stamps)
+        self.events.append(ev)
+        return ev
+
+    def delays(self) -> list[float]:
+        return [e.delay for e in self.events]

@@ -1,0 +1,4 @@
+"""Serving runtime: instrumented batched decode engine."""
+from .engine import Engine, ServeConfig, make_prefill_step, make_serve_step
+
+__all__ = ["Engine", "ServeConfig", "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,4 @@
+"""Runtime scheduling simulation (paper Insight 4)."""
+from .simulator import SimConfig, SimResult, StageSpec, TaskSpec, simulate
+
+__all__ = ["SimConfig", "SimResult", "StageSpec", "TaskSpec", "simulate"]

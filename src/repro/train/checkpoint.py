@@ -1,0 +1,115 @@
+"""Checkpointing: msgpack-serialized pytrees with shape/dtype manifest.
+
+No orbax in this environment; this is a self-contained, restart-safe
+implementation: atomic writes (tmp + rename), a JSON manifest for
+validation, and step-tagged directories with a ``latest`` pointer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], f"{prefix}/{k}")
+        elif isinstance(node, (list, tuple)) and not hasattr(node, "_fields"):
+            for i, v in enumerate(node):
+                walk(v, f"{prefix}/{i}")
+        elif hasattr(node, "_fields"):  # NamedTuple
+            for name in node._fields:
+                walk(getattr(node, name), f"{prefix}/{name}")
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk(tree, "")
+    return flat
+
+
+def save_checkpoint(path: str, step: int, tree: Any) -> str:
+    """Atomically write ``{path}/step_{step:08d}`` and update ``latest``."""
+    flat = _flatten(jax.device_get(tree))
+    step_dir = os.path.join(path, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    # bf16 isn't npz-native: store raw bytes with dtype recorded
+    arrays = {}
+    manifest = {"step": step, "leaves": {}}
+    for k, v in flat.items():
+        dtype = str(v.dtype)
+        manifest["leaves"][k] = {"shape": list(v.shape), "dtype": dtype}
+        arrays[k.replace("/", "|")] = (
+            v.view(np.uint16) if dtype == "bfloat16" else v
+        )
+    np.savez(os.path.join(tmp_dir, _ARRAYS), **arrays)
+    with open(os.path.join(tmp_dir, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    with open(os.path.join(path, "latest.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(path, "latest.tmp"), os.path.join(path, "latest"))
+    return step_dir
+
+
+def latest_step(path: str) -> int | None:
+    p = os.path.join(path, "latest")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def load_checkpoint(path: str, template: Any, step: int | None = None) -> Any:
+    """Restore into the structure of ``template`` (validating shapes)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    step_dir = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(step_dir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(step_dir, _ARRAYS))
+
+    flat_template = _flatten(template)
+    out = {}
+    import jax.numpy as jnp
+
+    for k, tmpl in flat_template.items():
+        meta = manifest["leaves"].get(k)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        if list(tmpl.shape) != meta["shape"]:
+            raise ValueError(f"{k}: shape {meta['shape']} != template {list(tmpl.shape)}")
+        arr = data[k.replace("/", "|")]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out[k] = arr
+
+    def rebuild(node, prefix):
+        if isinstance(node, dict):
+            return {k: rebuild(node[k], f"{prefix}/{k}") for k in node}
+        if hasattr(node, "_fields"):
+            return type(node)(
+                *(rebuild(getattr(node, n), f"{prefix}/{n}") for n in node._fields)
+            )
+        if isinstance(node, (list, tuple)):
+            return type(node)(rebuild(v, f"{prefix}/{i}") for i, v in enumerate(node))
+        return out[prefix]
+
+    return rebuild(template, "")

@@ -1,0 +1,108 @@
+"""AdamW + schedules, implemented directly on pytrees (no external deps).
+
+Optimizer state mirrors the parameter sharding (first/second moments get
+the same PartitionSpecs as their parameters), so the dry-run proves the
+full training memory footprint fits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment (pytree like params)
+    nu: Any       # second moment
+    loss_scale: jax.Array  # reserved for fp16-style scaling; 1.0 for bf16
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip(
+            (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+        return cfg.lr * warm * frac
+
+    return sched
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        loss_scale=jnp.ones((), jnp.float32),
+    )
+
+
+def _decay_mask(path: tuple, leaf) -> bool:
+    """No weight decay on norms / biases / 1-d params (standard practice)."""
+    names = [getattr(p, "key", str(p)) for p in path]
+    if any(n in ("scale", "dt_bias", "a_log", "d_skip", "bonus_u") or n.startswith("mu_") or n.startswith("b") and len(n) == 2 for n in names):
+        return False
+    return leaf.ndim > 1
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: AdamWState
+) -> tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    lr = cosine_schedule(cfg)(step)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.nu, grads)
+
+    decay_tree = jax.tree_util.tree_map_with_path(_decay_mask, params)
+
+    def upd(p, m, v, wd):
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if wd:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu, decay_tree)
+    new_state = AdamWState(step=step, mu=mu, nu=nu, loss_scale=state.loss_scale)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

@@ -1,0 +1,129 @@
+"""Tests for the I/O transport models (Insight 2) and the scheduling
+simulator (Insight 4): the paper's *ordinal* claims must hold.
+"""
+import numpy as np
+import pytest
+
+from repro.bus import Broker, CopyTransport, DatagramTransport, Message, publish_latencies
+from repro.core.stats import coefficient_of_variation as cv
+from repro.sched import SimConfig, StageSpec, TaskSpec, simulate
+
+KB, MB = 1024, 1024 * 1024
+
+
+# ------------------------------------------------------------------ bus ----
+def test_small_message_dds_beats_ipc():
+    m = Message("msg1", 62 * KB)
+    ipc = publish_latencies(CopyTransport(), m, 8)
+    dds = publish_latencies(DatagramTransport(), m, 8)
+    assert dds.mean() < ipc.mean()
+
+
+def test_large_message_ipc_beats_dds():
+    m = Message("msg2", int(6.2 * MB))
+    ipc = publish_latencies(CopyTransport(), m, 1)
+    dds = publish_latencies(DatagramTransport(), m, 1)
+    assert ipc.mean() < dds.mean()
+
+
+@pytest.mark.parametrize("transport", [CopyTransport(), DatagramTransport()])
+def test_range_grows_with_subscribers(transport):
+    m = Message("msg2", int(6.2 * MB))
+    ranges = []
+    for n in (1, 4, 8):
+        lat = publish_latencies(transport, m, n)
+        ranges.append(np.ptp(lat))
+    assert ranges[0] < ranges[1] < ranges[2]
+
+
+def test_dds_worker_pool_fast_slow_split():
+    """Paper: 6.2MB × 8 subscribers → 4 fast + 4 slow."""
+    m = Message("msg3", int(6.2 * MB))
+    lat = publish_latencies(DatagramTransport(workers=4), m, 8).mean(axis=0)
+    fast, slow = np.sort(lat)[:4], np.sort(lat)[4:]
+    assert slow.mean() > 1.5 * fast.mean()
+
+
+def test_broker_delivery_order_and_queue_drop():
+    b = Broker(transport=CopyTransport(), seed=0)
+    got = []
+    sub = b.subscribe("img", callback=lambda e: got.append(e.seq), queue_size=2)
+    for i in range(5):
+        b.publish("img", None, 62 * KB, now=float(i))
+    b.deliver_until(100.0)
+    assert got == [0, 1, 2, 3, 4]
+    assert len(sub.queue) == 2 and sub.dropped == 3
+
+
+# ---------------------------------------------------------------- sched ----
+def _pinet(policy, budget=0.0, scale=None, n=100):
+    return TaskSpec(
+        "pinet", 0.25,
+        (
+            StageSpec("pre", "cpu", 0.010, 0.05),
+            StageSpec("infer", "accel", 0.060, 0.03),
+            StageSpec("post", "cpu", 0.050, 0.10, scale_fn=scale),
+        ),
+        policy=policy, priority=99 if policy in ("FIFO", "RR") else 0,
+        deadline_budget=budget, n_jobs=n,
+    )
+
+
+def _competitor(n=100):
+    return TaskSpec(
+        "yolo", 0.25,
+        (
+            StageSpec("pre", "cpu", 0.010, 0.05),
+            StageSpec("infer", "accel", 0.140, 0.03),
+            StageSpec("post", "cpu", 0.015, 0.05),
+        ),
+        policy="OTHER", n_jobs=n,
+    )
+
+
+@pytest.fixture(scope="module")
+def proposal_scale():
+    rng = np.random.default_rng(1)
+    props = rng.integers(2, 22, 400)
+    return lambda j: props[j] / 6.0
+
+
+def test_competition_increases_variance_under_other(proposal_scale):
+    single = simulate([_pinet("OTHER", scale=proposal_scale)], SimConfig(cpu_cores=1))
+    compete = simulate(
+        [_pinet("OTHER", scale=proposal_scale), _competitor()], SimConfig(cpu_cores=1)
+    )
+    assert cv(compete.latencies["pinet"]) > cv(single.latencies["pinet"])
+    assert compete.latencies["pinet"].mean() > single.latencies["pinet"].mean()
+
+
+def test_rt_priority_shields_from_competition(proposal_scale):
+    compete = simulate(
+        [_pinet("FIFO", scale=proposal_scale), _competitor()], SimConfig(cpu_cores=1)
+    )
+    single = simulate([_pinet("FIFO", scale=proposal_scale)], SimConfig(cpu_cores=1))
+    assert compete.latencies["pinet"].mean() == pytest.approx(
+        single.latencies["pinet"].mean(), rel=0.05
+    )
+
+
+def test_deadline_cbs_throttling_worst_variance(proposal_scale):
+    """Insight 4: EDF+CBS with a mean-based budget throttles and shows the
+    worst latency profile; worst-observed budget throttles less."""
+    fifo = simulate([_pinet("FIFO", scale=proposal_scale)], SimConfig(cpu_cores=1))
+    d_mean = simulate(
+        [_pinet("DEADLINE", budget=0.15, scale=proposal_scale)], SimConfig(cpu_cores=1)
+    )
+    d_worst = simulate(
+        [_pinet("DEADLINE", budget=0.30, scale=proposal_scale)], SimConfig(cpu_cores=1)
+    )
+    assert d_mean.throttle_events["pinet"] > 0
+    assert d_mean.throttle_events["pinet"] >= d_worst.throttle_events["pinet"]
+    assert d_mean.latencies["pinet"].mean() > fifo.latencies["pinet"].mean()
+    assert cv(d_mean.latencies["pinet"]) > cv(fifo.latencies["pinet"])
+
+
+def test_simulator_deterministic():
+    a = simulate([_pinet("OTHER", n=50)], SimConfig(cpu_cores=2, seed=7))
+    b = simulate([_pinet("OTHER", n=50)], SimConfig(cpu_cores=2, seed=7))
+    np.testing.assert_array_equal(a.latencies["pinet"], b.latencies["pinet"])

@@ -1,0 +1,179 @@
+"""Unit tests for the core variance-analysis library."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DynamicDeadline,
+    FeaturePredictor,
+    GaussianPredictor,
+    KalmanDeadline,
+    KalmanPredictor,
+    MeanDeadline,
+    PercentileDeadline,
+    StageRecord,
+    StageTimer,
+    TimelineRecorder,
+    Welford,
+    WorstObserved,
+    coefficient_of_variation,
+    decompose,
+    evaluate,
+    latency_range,
+    pearson,
+    summarize,
+    tail_ratio,
+    variance_reduction,
+)
+from repro.core.variance import classify
+
+
+def test_range_and_cv_match_paper_definitions():
+    xs = [100.0, 120.0, 160.0, 100.0]
+    assert latency_range(xs) == 60.0
+    mu = np.mean(xs)
+    sigma = np.std(xs)
+    assert coefficient_of_variation(xs) == pytest.approx(sigma / mu)
+
+
+def test_summarize_table1_row():
+    xs = np.array([82.0] * 90 + [364.0] * 10)   # LaneNet-like tail
+    s = summarize(xs)
+    assert s.range == pytest.approx(282.0)
+    assert s.range_over_mean_pct == pytest.approx(100 * 282.0 / xs.mean())
+    assert s.p99 >= s.p95 >= s.p50
+
+
+def test_welford_matches_numpy_and_merge():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(0, 0.5, 500)
+    w = Welford()
+    w.update_many(xs)
+    assert w.mean == pytest.approx(xs.mean())
+    assert w.std == pytest.approx(xs.std(), rel=1e-9)
+    a, b = Welford(), Welford()
+    a.update_many(xs[:200])
+    b.update_many(xs[200:])
+    m = a.merge(b)
+    assert m.mean == pytest.approx(xs.mean())
+    assert m.variance == pytest.approx(xs.var(), rel=1e-9)
+
+
+def test_pearson_degenerate_and_perfect():
+    assert pearson([1, 2, 3], [2, 4, 6]) == pytest.approx(1.0)
+    assert pearson([1, 2, 3], [6, 4, 2]) == pytest.approx(-1.0)
+    assert pearson([1, 1, 1], [1, 2, 3]) == 0.0
+
+
+def make_recorder(post_scale):
+    """Pipeline where post time tracks a 'proposal count' stream."""
+    rng = np.random.default_rng(1)
+    rec = TimelineRecorder()
+    for i in range(200):
+        props = float(rng.integers(1, 20))
+        r = StageRecord(
+            stages={
+                "read": 0.001 + rng.normal(0, 1e-5),
+                "inference": 0.050 + rng.normal(0, 1e-4),
+                "post_processing": post_scale * props + rng.normal(0, 1e-5),
+            },
+            meta={"num_proposals": props},
+        )
+        rec.add(r)
+    return rec
+
+
+def test_variance_decomposition_identifies_post_dominated():
+    rec = make_recorder(post_scale=0.005)
+    dec = decompose(rec)
+    assert dec.dominant().stage == "post_processing"
+    assert classify(rec) == "post_processing-dominated"
+    # shares sum to ~1
+    assert sum(a.covariance_share for a in dec.attributions) == pytest.approx(1.0, abs=1e-6)
+    # Fig. 5: corr(#proposals, post) should be ~1
+    assert rec.correlation_meta("num_proposals") > 0.95
+
+
+def test_variance_decomposition_inference_dominated():
+    rng = np.random.default_rng(2)
+    rec = TimelineRecorder()
+    for _ in range(100):
+        rec.add(StageRecord(stages={
+            "inference": 0.05 + rng.normal(0, 0.01),
+            "post_processing": 0.002 + rng.normal(0, 1e-5),
+        }))
+    assert classify(rec) == "inference-dominated"
+
+
+def test_deadline_policies_tradeoff():
+    """Paper Insight 4: worst-observed wastes much more than mean."""
+    rng = np.random.default_rng(3)
+    trace = rng.lognormal(math.log(0.1), 0.3, 2000)
+    worst = evaluate(WorstObserved(), list(trace))
+    mean = evaluate(MeanDeadline(margin=1.0), list(trace))
+    p95 = evaluate(PercentileDeadline(q=95), list(trace))
+    assert worst.miss_rate < 0.01
+    assert worst.mean_waste > 2 * p95.mean_waste      # huge reserved waste
+    assert mean.miss_rate > worst.miss_rate           # mean misses more
+    assert p95.mean_waste < worst.mean_waste
+
+
+def test_kalman_deadline_adapts_to_drift():
+    trace = [0.1] * 200 + [0.2] * 200
+    kd = KalmanDeadline()
+    rep = evaluate(kd, trace)
+    assert rep.miss_rate < 0.05                        # adapts after the jump
+    wo = evaluate(WorstObserved(), trace)
+    assert wo.mean_waste >= 0.0
+
+
+def test_dynamic_deadline_criticality():
+    d = DynamicDeadline(headroom=2.0)
+    d.observe(0.1)
+    base = d.deadline()
+    d.set_criticality(0.5)
+    assert d.deadline() == pytest.approx(base * 0.5)
+
+
+def test_predictors_one_step():
+    from repro.core.predictor import rolling_eval
+
+    rng = np.random.default_rng(4)
+    trace = list(rng.normal(0.1, 0.005, 500))
+    g = rolling_eval(GaussianPredictor(), trace)
+    k = rolling_eval(KalmanPredictor(), trace)
+    assert g["mae"] < 0.01 and k["mae"] < 0.01
+    assert g["coverage99"] > 0.9
+
+
+def test_feature_predictor_beats_gaussian_on_proposal_driven_latency():
+    from repro.core.predictor import rolling_eval
+
+    rng = np.random.default_rng(5)
+    props = rng.integers(1, 30, 800).astype(float)
+    trace = list(0.01 + 0.004 * props + rng.normal(0, 5e-4, 800))
+    g = rolling_eval(GaussianPredictor(), trace)
+    f = rolling_eval(FeaturePredictor(), trace, features=list(props))
+    assert f["mae"] < 0.5 * g["mae"]    # feature signal halves the error
+
+
+def test_stage_timer_and_tail_ratio():
+    t = StageTimer(clock=iter([0.0, 1.0, 1.0, 3.5]).__next__)
+    with t.stage("a"):
+        pass
+    with t.stage("b"):
+        pass
+    rec = t.finish()
+    assert rec.stages["a"] == pytest.approx(1.0)
+    assert rec.stages["b"] == pytest.approx(2.5)
+    assert rec.end_to_end == pytest.approx(3.5)
+    assert tail_ratio([1] * 99 + [10], p=99.9) > 5
+
+
+def test_variance_reduction_report():
+    before = np.r_[np.full(95, 1.0), np.full(5, 3.0)]
+    after = np.full(100, 1.05)
+    rep = variance_reduction(before, after)
+    assert rep["cv_after"] < 1e-9
+    assert rep["cv_reduction_x"] > 100 or math.isinf(rep["cv_reduction_x"])

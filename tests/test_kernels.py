@@ -1,0 +1,152 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True on CPU,
+assert_allclose against the pure-jnp oracles in ``repro.kernels.ref``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.rwkv6_scan import rwkv6_wkv_fwd
+from repro.kernels.mamba2_ssd import mamba2_ssd_fwd
+from repro.kernels import ref as R
+
+KEY = jax.random.PRNGKey(42)
+
+
+def rand(i, shape, dtype=jnp.float32):
+    x = jax.random.normal(jax.random.fold_in(KEY, i), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5), jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
+
+
+# ---------------------------------------------------------------- flash ----
+@pytest.mark.parametrize("b,s,h,k,d", [
+    (1, 128, 4, 4, 32),    # MHA
+    (2, 256, 4, 2, 32),    # GQA
+    (1, 128, 8, 1, 64),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 96])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, k, d, causal, window, dtype):
+    q = rand(0, (b, s, h, d), dtype)
+    kk = rand(1, (b, s, k, d), dtype)
+    v = rand(2, (b, s, k, d), dtype)
+    out = flash_attention_fwd(q, kk, v, causal=causal, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+    ref = R.flash_attention_ref(q.astype(jnp.float32), kk.astype(jnp.float32),
+                                v.astype(jnp.float32), causal, window)
+    tol = TOLS[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **tol)
+
+
+def test_flash_attention_block_shape_independence():
+    """Same result for every block decomposition."""
+    q = rand(0, (1, 256, 2, 32))
+    k = rand(1, (1, 256, 2, 32))
+    v = rand(2, (1, 256, 2, 32))
+    outs = [
+        np.asarray(flash_attention_fwd(q, k, v, block_q=bq, block_kv=bk, interpret=True))
+        for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------- decode ----
+@pytest.mark.parametrize("b,h,k,d,c", [
+    (2, 4, 2, 32, 256),
+    (1, 8, 1, 64, 128),   # MQA
+    (2, 4, 4, 32, 128),   # MHA
+])
+@pytest.mark.parametrize("window", [None, 48])
+@pytest.mark.parametrize("fill", [16, 100])
+def test_decode_attention_sweep(b, h, k, d, c, window, fill):
+    q = rand(3, (b, h, d))
+    kc = rand(4, (b, c, k, d))
+    vc = rand(5, (b, c, k, d))
+    positions = jnp.where(jnp.arange(c) < fill, jnp.arange(c), -1)
+    next_pos = jnp.asarray(fill - 1)
+    out = decode_attention_fwd(q, kc, vc, positions, next_pos,
+                               window=window, block_kv=64, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, positions, next_pos, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ring_buffer_wraparound():
+    """Slot order must not matter — only the positions vector."""
+    b, h, k, d, c = 1, 2, 2, 16, 64
+    q = rand(6, (b, h, d))
+    kc = rand(7, (b, c, k, d))
+    vc = rand(8, (b, c, k, d))
+    # ring buffer that has wrapped: slot i holds position i+c (i < 10), else i
+    positions = jnp.where(jnp.arange(c) < 10, jnp.arange(c) + c, jnp.arange(c))
+    next_pos = jnp.asarray(c + 9)
+    out = decode_attention_fwd(q, kc, vc, positions, next_pos,
+                               window=c, block_kv=32, interpret=True)
+    ref = R.decode_attention_ref(q, kc, vc, positions, next_pos, window=c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- rwkv6 ----
+@pytest.mark.parametrize("b,s,h,dk", [(1, 64, 2, 16), (2, 128, 3, 32), (1, 128, 1, 64)])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("decay_strength", [0.5, 6.0])
+def test_rwkv6_wkv_sweep(b, s, h, dk, chunk, decay_strength):
+    r = rand(10, (b, s, h, dk))
+    k = rand(11, (b, s, h, dk))
+    v = rand(12, (b, s, h, dk))
+    logw = -jax.nn.softplus(rand(13, (b, s, h, dk)) * decay_strength)
+    u = rand(14, (h, dk))
+    out = rwkv6_wkv_fwd(r, k, v, logw, u, chunk=chunk, interpret=True)
+    ref = R.rwkv6_wkv_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+def test_rwkv6_strong_decay_no_overflow():
+    """Pairwise log-domain form must survive near-total decay."""
+    b, s, h, dk = 1, 64, 1, 16
+    r = rand(15, (b, s, h, dk))
+    k = rand(16, (b, s, h, dk))
+    v = rand(17, (b, s, h, dk))
+    logw = jnp.full((b, s, h, dk), -25.0)   # decay ~ e^-25 per step
+    u = rand(18, (h, dk))
+    out = rwkv6_wkv_fwd(r, k, v, logw, u, chunk=32, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    ref = R.rwkv6_wkv_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+# --------------------------------------------------------------- mamba2 ----
+@pytest.mark.parametrize("b,s,h,p,n", [(1, 64, 4, 16, 16), (2, 128, 8, 16, 24)])
+@pytest.mark.parametrize("chunk", [16, 32])
+@pytest.mark.parametrize("head_block", [2, 4])
+def test_mamba2_ssd_sweep(b, s, h, p, n, chunk, head_block):
+    x = rand(20, (b, s, h, p))
+    dt = jax.nn.softplus(rand(21, (b, s, h)))
+    a = -jnp.exp(rand(22, (h,)) * 0.2)
+    bm = rand(23, (b, s, n))
+    cm = rand(24, (b, s, n))
+    out = mamba2_ssd_fwd(x, dt, a, bm, cm, chunk=chunk, head_block=head_block,
+                         interpret=True)
+    ref = R.mamba2_ssd_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+def test_mamba2_chunk_invariance():
+    b, s, h, p, n = 1, 128, 4, 8, 16
+    x = rand(25, (b, s, h, p))
+    dt = jax.nn.softplus(rand(26, (b, s, h)))
+    a = -jnp.exp(rand(27, (h,)) * 0.2)
+    bm = rand(28, (b, s, n))
+    cm = rand(29, (b, s, n))
+    outs = [
+        np.asarray(mamba2_ssd_fwd(x, dt, a, bm, cm, chunk=c, head_block=2, interpret=True))
+        for c in (16, 32, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deadline import MeanDeadline, PercentileDeadline, WorstObserved, evaluate
+from repro.core.stats import Welford, coefficient_of_variation, latency_range, summarize
+from repro.perception.detector import dynamic_nms, static_nms
+from repro.models.attention import chunked_attention, dense_attention
+
+finite_latencies = st.lists(
+    st.floats(min_value=1e-6, max_value=10.0, allow_nan=False), min_size=2, max_size=200
+)
+
+
+@given(finite_latencies)
+@settings(max_examples=50, deadline=None)
+def test_summary_invariants(xs):
+    s = summarize(xs)
+    assert s.min <= s.p50 <= s.p99 <= s.max + 1e-12
+    assert s.range == max(xs) - min(xs)
+    assert s.cv >= 0
+    assert s.range_over_mean_pct >= 0
+
+
+@given(finite_latencies)
+@settings(max_examples=50, deadline=None)
+def test_welford_matches_batch(xs):
+    w = Welford()
+    w.update_many(xs)
+    assert math.isclose(w.mean, float(np.mean(xs)), rel_tol=1e-9, abs_tol=1e-12)
+    assert math.isclose(w.variance, float(np.var(xs)), rel_tol=1e-6, abs_tol=1e-12)
+
+
+@given(finite_latencies)
+@settings(max_examples=30, deadline=None)
+def test_worst_observed_never_misses_after_seeing_worst(xs):
+    """Once the worst value has been observed, no later job can miss."""
+    worst_idx = int(np.argmax(xs))
+    trace = xs[: worst_idx + 1] + xs  # worst seen in prefix, then full replay
+    rep = evaluate(WorstObserved(), trace, warmup=worst_idx + 1)
+    assert rep.miss_rate == 0.0
+
+
+@given(finite_latencies)
+@settings(max_examples=30, deadline=None)
+def test_deadline_waste_miss_tradeoff_is_monotone(xs):
+    """A larger percentile target can only raise waste and lower misses."""
+    lo = evaluate(PercentileDeadline(q=50.0, window=512), xs, warmup=1)
+    hi = evaluate(PercentileDeadline(q=100.0, window=512), xs, warmup=1)
+    assert hi.miss_rate <= lo.miss_rate + 1e-12
+
+
+@given(
+    st.integers(min_value=1, max_value=3),    # batch
+    st.integers(min_value=1, max_value=4),    # kv heads
+    st.integers(min_value=1, max_value=3),    # group
+    st.sampled_from([32, 64]),                # seq
+    st.booleans(),                            # causal
+)
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_matches_dense(b, k, g, s, causal):
+    h = k * g
+    d = 8
+    key = jax.random.PRNGKey(b * 1000 + k * 100 + g * 10 + s)
+    q = jax.random.normal(key, (b, s, h, d))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (b, s, k, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, k, d))
+    pos = jnp.arange(s)
+    ref = dense_attention(q, kk, v, pos, pos, causal, None)
+    for tri in (True, False):
+        out = chunked_attention(q, kk, v, 0, causal, None, 16, 16, triangular=tri)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=25, deadline=None)
+def test_static_nms_agrees_with_dynamic_on_topk(n, seed):
+    """On the same candidate set, the static fixed-shape NMS keeps exactly
+    the boxes the dynamic host NMS keeps."""
+    rng = np.random.default_rng(seed)
+    y0 = rng.uniform(0, 80, n)
+    x0 = rng.uniform(0, 300, n)
+    boxes = np.stack([y0, x0, y0 + rng.uniform(4, 20, n), x0 + rng.uniform(4, 20, n)], -1)
+    scores = rng.uniform(0.1, 1.0, n)
+    # dynamic on full set
+    keep_dyn = set(map(int, dynamic_nms(boxes.astype(np.float32), scores.astype(np.float32))))
+    tb, ts, keep_mask, idx = static_nms(
+        jnp.asarray(boxes, jnp.float32), jnp.asarray(scores, jnp.float32), k=n
+    )
+    keep_static = set(int(i) for i, m in zip(np.asarray(idx), np.asarray(keep_mask)) if m)
+    assert keep_static == keep_dyn
+
+
+@given(st.integers(min_value=2, max_value=64), st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_moe_dispatch_conservation(tokens, seed):
+    """With generous capacity, every (token, choice) is dispatched exactly
+    once and combine weights sum to 1 per token."""
+    from repro.configs.base import ModelConfig
+    from repro.models.moe import moe_block
+    from repro.models.params import init_params
+    from repro.models.moe import moe_specs
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, head_dim=8, d_ff=32, vocab_size=64, num_experts=4,
+        num_experts_per_tok=2, capacity_factor=8.0, moe_group_size=16,
+        dtype="float32", param_dtype="float32",
+    )
+    key = jax.random.PRNGKey(seed % (2**31))
+    params = init_params(moe_specs(cfg), key, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, tokens, 16))
+    out, aux = moe_block(params, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux["drop_fraction"]) < 1e-6
+    assert bool(jnp.isfinite(out).all())
