@@ -19,6 +19,7 @@ MODULES = [
     "table8_sched",
     "fig13_hardware",
     "fig16_system",
+    "multi_tenant",
     "static_fix",
     "roofline",
 ]

@@ -1,0 +1,9 @@
+"""Repo-root pytest bootstrap: make ``import repro`` work without the
+``PYTHONPATH=src`` incantation (pytest.ini's ``pythonpath = src`` handles
+pytest >= 7; this keeps direct collection and IDE runners working too)."""
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,8 +1,9 @@
 """I/O middleware models: pub/sub broker + transport cost models."""
+from .clock import SimClock
 from .transport import CopyTransport, DatagramTransport, Message, publish_latencies
 from .pubsub import Broker, Envelope, Subscription
 
 __all__ = [
     "CopyTransport", "DatagramTransport", "Message", "publish_latencies",
-    "Broker", "Envelope", "Subscription",
+    "Broker", "Envelope", "Subscription", "SimClock",
 ]

@@ -37,15 +37,16 @@ class Envelope:
 class Subscription:
     topic: str
     callback: Optional[Callable[[Envelope], None]]
-    queue_size: int
+    queue_size: int          # 0 = callback-only: no buffering, no drops
     queue: list = dataclasses.field(default_factory=list)
     dropped: int = 0
 
     def offer(self, env: Envelope) -> None:
-        if len(self.queue) >= self.queue_size:
-            self.queue.pop(0)       # drop-oldest, ROS queue semantics
-            self.dropped += 1
-        self.queue.append(env)
+        if self.queue_size > 0:
+            if len(self.queue) >= self.queue_size:
+                self.queue.pop(0)   # drop-oldest, ROS queue semantics
+                self.dropped += 1
+            self.queue.append(env)
         if self.callback is not None:
             self.callback(env)
 
@@ -73,6 +74,14 @@ class Broker:
         callback: Optional[Callable[[Envelope], None]] = None,
         queue_size: int = 1,
     ) -> Subscription:
+        """``queue_size=0`` gives a callback-only subscription: envelopes
+        are handed to the callback and never buffered, so ``dropped`` stays
+        a truthful loss counter for consumers that drain synchronously."""
+        if queue_size <= 0 and callback is None:
+            raise ValueError(
+                "queue_size=0 without a callback would silently discard "
+                "every envelope; pass a callback or a positive queue_size"
+            )
         sub = Subscription(topic, callback, queue_size)
         self.subs[topic].append(sub)
         return sub

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Iterable, Sequence
 
 import numpy as np
@@ -48,8 +49,10 @@ class DeadlinePolicy:
     def deadline(self) -> float:
         raise NotImplementedError
 
-    def reset(self) -> None:  # pragma: no cover - trivial
-        self.__init__()  # type: ignore[misc]
+    def reset(self) -> None:
+        """Clear observed state while preserving constructor configuration
+        (margins, window sizes, noise parameters survive a reset)."""
+        raise NotImplementedError
 
 
 class WorstObserved(DeadlinePolicy):
@@ -67,6 +70,9 @@ class WorstObserved(DeadlinePolicy):
 
     def deadline(self) -> float:
         return self._worst * self.margin if self._worst else math.inf
+
+    def reset(self) -> None:
+        self._worst = 0.0
 
 
 class MeanDeadline(DeadlinePolicy):
@@ -86,6 +92,9 @@ class MeanDeadline(DeadlinePolicy):
             return math.inf
         return self._w.mean * self.margin
 
+    def reset(self) -> None:
+        self._w = Welford()
+
 
 class PercentileDeadline(DeadlinePolicy):
     """pXX over a sliding window — the natural middle ground the paper's
@@ -95,18 +104,23 @@ class PercentileDeadline(DeadlinePolicy):
 
     def __init__(self, q: float = 95.0, window: int = 256) -> None:
         self.q = q
-        self.window = window
-        self._buf: list[float] = []
+        self._buf: deque[float] = deque(maxlen=window)
+
+    @property
+    def window(self) -> int:
+        """Single source of truth: the deque's own bound."""
+        return self._buf.maxlen
 
     def observe(self, latency: float) -> None:
         self._buf.append(float(latency))
-        if len(self._buf) > self.window:
-            self._buf.pop(0)
 
     def deadline(self) -> float:
         if not self._buf:
             return math.inf
         return float(np.percentile(np.asarray(self._buf), self.q))
+
+    def reset(self) -> None:
+        self._buf.clear()
 
 
 class KalmanDeadline(DeadlinePolicy):
@@ -140,6 +154,10 @@ class KalmanDeadline(DeadlinePolicy):
             return math.inf
         return self._x + self.k_sigma * math.sqrt(self._p + self.r)
 
+    def reset(self) -> None:
+        self._x = None
+        self._p = 1.0
+
 
 class DynamicDeadline(DeadlinePolicy):
     """D3 [21] style: the deadline is not a property of the task but of the
@@ -166,6 +184,10 @@ class DynamicDeadline(DeadlinePolicy):
         if self._ema is None:
             return math.inf
         return self._ema * self.headroom * self._criticality
+
+    def reset(self) -> None:
+        self._ema = None
+        self._criticality = 1.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,7 +24,63 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["rwkv6_wkv_fwd"]
 
 
-def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *, nc: int):
+# Largest sub-tile the f32 carry accumulation folds at once.  Chunk-local
+# cumulative log-decays grow linearly with the tile length; at 64 positions
+# of strong decay the exponents reach O(±200) and the f32 cancellation
+# ``cum_tm1[t] - cum[u]`` costs ~1e-5 absolute in the exponent — enough to
+# drift the carried state past the 2e-4 oracle tolerance.  Folding the
+# state through ≤32-wide tiles keeps the same order of operations as the
+# step-by-step reference within f32 rounding, independent of block size.
+_STATE_TILE = 32
+
+
+def _fold_tile(r, k, v, lw, u, s):
+    """One ≤32-wide tile: (y, s_new) for f32 (T, K) inputs and (K, K) state.
+
+    The state-fold decay ``exp(sum_{j>u} lw_j)`` is computed from a direct
+    suffix cumsum, not ``total - cum[u]`` — the latter cancels two large
+    prefix sums and loses the low bits of exactly the exponents that matter
+    (late positions, where the factor is near 1).
+    """
+    t = r.shape[0]
+    cum = jnp.cumsum(lw, axis=0)                       # inclusive prefix
+    cum_tm1 = cum - lw                                 # exclusive prefix
+
+    # intra-tile: y[t] = sum_{u<t} (r_t·exp(cum_tm1[t]-cum[u])·k_u) v_u
+    #           + (r_t·diag(u)·k_t) v_t
+    # pairwise log-domain form: exponents are ≤ 0 for every kept (t, u)
+    # pair, so no overflow for arbitrarily strong decay.  The (T, T, K)
+    # tile is ≤ 0.25 MiB VMEM at T=32, K=64 (bounded, static).
+    pair = cum_tm1[:, None, :] - cum[None, :, :]       # (T, T, K)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) > jax.lax.broadcasted_iota(
+        jnp.int32, (t, t), 1
+    )
+    wpair = jnp.where(tri[:, :, None], jnp.exp(pair), 0.0)
+    amat = jnp.einsum(
+        "tk,uk,tuk->tu", r, k, wpair,
+    )
+    diag = jnp.sum(r * u[None, :] * k, axis=1)         # (T,)
+    y = jnp.dot(amat, v, preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+
+    # inter-tile: y[t] += (r_t * exp(cum_tm1[t])) @ S
+    y = y + jnp.dot(r * jnp.exp(cum_tm1), s,
+                    preferred_element_type=jnp.float32)
+
+    # suffix[u] = sum_{j>u} lw[j], computed without large-sum cancellation
+    scum = jnp.flip(jnp.cumsum(jnp.flip(lw, 0), axis=0), 0)   # inclusive suffix
+    suffix = jnp.concatenate([scum[1:], jnp.zeros_like(scum[:1])], axis=0)
+    total = scum[0]
+    kw = k * jnp.exp(suffix)                           # (T, K), exponents ≤ 0
+
+    # state update: S = diag(exp(total)) S + sum_u (k_u exp(suffix[u])) v_u^T
+    s_new = s * jnp.exp(total)[:, None] + jnp.dot(
+        kw.T, v, preferred_element_type=jnp.float32
+    )
+    return y, s_new
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *, ts: int):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -38,38 +94,15 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *, nc: int):
     u = u_ref[0].astype(jnp.float32)         # (K,)
 
     t = r.shape[0]
-    cum = jnp.cumsum(lw, axis=0)                       # inclusive
-    cum_tm1 = cum - lw                                 # exclusive prefix
-    total = cum[-1]
+    s = s_scr[...]
+    ys = []
+    for i in range(0, t, ts):               # static unrolled sub-tile loop
+        sl = slice(i, i + ts)
+        y_i, s = _fold_tile(r[sl], k[sl], v[sl], lw[sl], u, s)
+        ys.append(y_i)
+    s_scr[...] = s
 
-    # intra-chunk: y[t] = sum_{u<t} (r_t·exp(cum_tm1[t]-cum[u])·k_u) v_u
-    #            + (r_t·diag(u)·k_t) v_t
-    # pairwise log-domain form: exponents are ≤ 0 for every kept (t, u)
-    # pair, so no overflow for arbitrarily strong decay.  The (T, T, K)
-    # tile is ~1 MiB VMEM at T=K=64 (bounded, static).
-    pair = cum_tm1[:, None, :] - cum[None, :, :]       # (T, T, K)
-    tri = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) > jax.lax.broadcasted_iota(
-        jnp.int32, (t, t), 1
-    )
-    wpair = jnp.where(tri[:, :, None], jnp.exp(pair), 0.0)
-    amat = jnp.einsum(
-        "tk,uk,tuk->tu", r, k, wpair,
-    )
-    diag = jnp.sum(r * u[None, :] * k, axis=1)         # (T,)
-    y = jnp.dot(amat, v, preferred_element_type=jnp.float32)
-    y = y + diag[:, None] * v
-    kw = k * jnp.exp(total - cum)                      # (T, K), exponents ≤ 0
-
-    # inter-chunk: y[t] += (r_t * exp(cum_tm1[t])) @ S
-    y = y + jnp.dot(r * jnp.exp(cum_tm1), s_scr[...],
-                    preferred_element_type=jnp.float32)
-
-    # state update: S = diag(exp(total)) S + sum_u (k_u exp(total-cum[u])) v_u^T
-    s_scr[...] = s_scr[...] * jnp.exp(total)[:, None] + jnp.dot(
-        kw.T, v, preferred_element_type=jnp.float32
-    )
-
-    o_ref[0, 0] = y.astype(o_ref.dtype)
+    o_ref[0, 0] = jnp.concatenate(ys, axis=0).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -86,11 +119,18 @@ def rwkv6_wkv_fwd(
     if s % chunk:
         raise ValueError(f"seq {s} not divisible by chunk {chunk}")
     nc = s // chunk
+    if chunk > _STATE_TILE and chunk % _STATE_TILE:
+        # gcd would silently degenerate to tiny tiles (chunk=40 → ts=8,
+        # chunk=33 → ts=1) and explode the unrolled fold loop
+        raise ValueError(
+            f"chunk {chunk} must be <= {_STATE_TILE} or a multiple of it"
+        )
+    ts = min(chunk, _STATE_TILE)
 
     def prep(x):
         return x.transpose(0, 2, 1, 3)     # (B, H, S, K)
 
-    kernel = functools.partial(_kernel, nc=nc)
+    kernel = functools.partial(_kernel, ts=ts)
     out = pl.pallas_call(
         kernel,
         grid=(b, h, nc),

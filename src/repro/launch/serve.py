@@ -1,8 +1,18 @@
-"""Serving launcher: batched greedy decoding with the instrumented engine
-and a live deadline policy.
+"""Serving launcher: single-stream instrumented decoding, or the
+multi-tenant continuous-batching runtime under a Poisson arrival stream.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+Single stream (the seed engine)::
+
+    python -m repro.launch.serve --arch rwkv6-3b --smoke \
         --batch 4 --context 128 --tokens 64
+
+Multi-tenant load generator (``--streams N``): N tenants arrive as a
+Poisson process on the bus broker's simulated clock, are admitted into
+``--batch`` padded slots (deadline-aware admission unless
+``--admission none``), and the run prints a per-tenant report — mean,
+CV, p99, miss rate per stream::
+
+    python -m repro.launch.serve --arch rwkv6-3b --smoke --streams 8
 """
 from __future__ import annotations
 
@@ -11,10 +21,20 @@ import argparse
 import jax
 import numpy as np
 
+from repro.bus import Broker, CopyTransport, SimClock
 from repro.configs import ARCHS, get_config
 from repro.core.deadline import KalmanDeadline, MeanDeadline, PercentileDeadline, WorstObserved
 from repro.models import Model
-from repro.runtime import Engine, ServeConfig
+from repro.runtime import (
+    AdmissionController,
+    AlwaysAdmit,
+    Engine,
+    MultiTenantConfig,
+    MultiTenantEngine,
+    RequestQueue,
+    ServeConfig,
+    poisson_workload,
+)
 
 POLICY = {
     "worst": WorstObserved,
@@ -24,24 +44,7 @@ POLICY = {
 }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--context", type=int, default=128)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--deadline", choices=sorted(POLICY), default="mean")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if not cfg.supports_decode:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    print(f"arch={cfg.name} params={model.num_params()/1e6:.1f}M")
-
+def serve_single(args, cfg, model, params) -> None:
     eng = Engine(
         model,
         ServeConfig(batch=args.batch, context=args.context),
@@ -57,6 +60,101 @@ def main() -> None:
                    for k, v in rep.items()))
     for row in rec.breakdown_table():
         print(f"  {row['stage']:>16s}: mean={row['mean']*1e3:7.3f}ms cv={row['cv']:.3f}")
+
+
+def serve_multi_tenant(args, cfg, model, params) -> None:
+    clock = SimClock()
+    broker = Broker(transport=CopyTransport(), seed=0)
+    queue = RequestQueue()
+    # callback-only subscription: every envelope goes straight into the
+    # RequestQueue, nothing is double-retained, dropped stays truthful
+    broker.subscribe("requests", callback=lambda env: queue.push(env.payload),
+                     queue_size=0)
+
+    workload = poisson_workload(
+        args.streams,
+        rate_hz=args.arrival_rate,
+        vocab_size=cfg.vocab_size,
+        prompt_len=args.prompt_len,
+        max_new_tokens=args.tokens,
+        deadline_s=args.slo_ms * 1e-3 if args.slo_ms is not None else None,
+        seed=0,
+    )
+    for req in workload:
+        broker.publish("requests", req, size_bytes=4 * req.prompt.size,
+                       now=req.arrival_s)
+
+    admission = (
+        AlwaysAdmit() if args.admission == "none"
+        else AdmissionController(confidence=0.95)
+    )
+    eng = MultiTenantEngine(
+        model, params,
+        MultiTenantConfig(capacity=args.batch, context=args.context),
+        admission=admission,
+        policy_factory=lambda req: POLICY[args.deadline](),
+    )
+    eng.compile()
+    eng.drain(queue, clock=clock, source=broker)
+
+    agg = eng.aggregate_report()
+    print(
+        f"served {agg['streams']} streams ({agg['shed_streams']} shed) in "
+        f"{agg['steps']} steps over {clock.time():.3f}s simulated; "
+        f"traces={agg['traces']}"
+    )
+    print(
+        f"step latency: mean={agg['step_mean_s']*1e3:.3f}ms "
+        f"cv={agg['step_cv']:.3f} p99={agg['step_p99_s']*1e3:.3f}ms; "
+        f"jobs={agg['jobs']} miss_rate={agg['miss_rate']:.3f}"
+    )
+    hdr = f"{'tenant':>10s} {'status':>9s} {'jobs':>5s} {'mean_ms':>8s} {'cv':>6s} {'p99_ms':>8s} {'miss%':>6s}"
+    print(hdr)
+    for row in eng.per_tenant_report():
+        print(
+            f"{row['tenant']:>10s} {row['status']:>9s} {row['jobs']:>5d} "
+            f"{row['mean_s']*1e3:8.3f} {row['cv']:6.3f} {row['p99_s']*1e3:8.3f} "
+            f"{row['miss_rate']*100:6.2f}"
+        )
+    delays = broker.delays.get("requests", [])
+    if delays:
+        print(
+            f"transport: {len(delays)} deliveries, mean "
+            f"{np.mean(delays)*1e6:.1f}us, p99 {np.percentile(delays, 99)*1e6:.1f}us"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size (multi-tenant: static slot capacity)")
+    ap.add_argument("--context", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--deadline", choices=sorted(POLICY), default="mean")
+    ap.add_argument("--streams", type=int, default=0,
+                    help="multi-tenant mode: serve N Poisson-arriving streams")
+    ap.add_argument("--arrival-rate", type=float, default=100.0,
+                    help="multi-tenant Poisson arrival rate (streams/s, simulated)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-token SLO; enables deadline-aware shedding")
+    ap.add_argument("--admission", choices=["none", "predictive"],
+                    default="predictive")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={model.num_params()/1e6:.1f}M")
+
+    if args.streams > 0:
+        serve_multi_tenant(args, cfg, model, params)
+    else:
+        serve_single(args, cfg, model, params)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,32 @@
-"""Serving runtime: instrumented batched decode engine."""
-from .engine import Engine, ServeConfig, make_prefill_step, make_serve_step
+"""Serving runtime package.
 
-__all__ = ["Engine", "ServeConfig", "make_prefill_step", "make_serve_step"]
+* ``engine``       — single-stream instrumented batched decode (the seed
+                     engine, kept as the simple path).
+* ``queue``        — ``StreamRequest`` / ``RequestQueue`` admission boundary
+                     and the Poisson workload generator.
+* ``admission``    — deadline-aware admission control over a learned
+                     occupancy → step-latency model.
+* ``multi_tenant`` — fixed-capacity continuous-batching engine: streams
+                     join/leave padded slots without recompilation, with
+                     per-tenant deadline policies and variance attribution.
+"""
+from .admission import AdmissionController, AdmissionDecision, AlwaysAdmit
+from .engine import Engine, ServeConfig, make_prefill_step, make_serve_step
+from .multi_tenant import MultiTenantConfig, MultiTenantEngine, TenantState
+from .queue import RequestQueue, StreamRequest, poisson_workload
+
+__all__ = [
+    "Engine",
+    "ServeConfig",
+    "make_prefill_step",
+    "make_serve_step",
+    "AdmissionController",
+    "AdmissionDecision",
+    "AlwaysAdmit",
+    "MultiTenantConfig",
+    "MultiTenantEngine",
+    "TenantState",
+    "RequestQueue",
+    "StreamRequest",
+    "poisson_workload",
+]

@@ -1,0 +1,160 @@
+"""Deadline-aware admission control (paper Insight 4, applied to serving).
+
+The paper's scheduler analysis shows that deadline mechanisms built on the
+*worst observed* latency waste reserved budget, while tight budgets throttle
+constantly.  The serving-side fix is to decide *before* seating a stream
+whether its SLO is achievable under the contention it would join: predict
+the engine step latency at the prospective occupancy (streams sharing one
+accelerator batch), and admit only when the predicted tail fits the
+tenant's deadline.
+
+The latency model reuses ``core.predictor.FeaturePredictor`` — an online
+ridge-regularized linear fit of step latency against the number of
+co-resident streams, exactly the observable-feature prediction the paper
+argues for (Insight 1/3: predict per-job latency instead of budgeting for
+the worst case).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.predictor import FeaturePredictor, Prediction
+
+from .queue import StreamRequest
+
+__all__ = ["AdmissionDecision", "AdmissionController", "AlwaysAdmit"]
+
+ADMIT = "admit"
+DEFER = "defer"
+SHED = "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    action: str                  # admit | defer | shed
+    predicted: Optional[Prediction]
+    reason: str
+
+
+class AdmissionController:
+    """Predict step latency at the prospective occupancy; gate admission.
+
+    * ``admit``  — predicted ``quantile(confidence)`` step latency at
+      occupancy ``n_active + 1`` fits the tenant's per-token SLO.
+    * ``defer``  — the SLO would be breached *now*, but would be met at the
+      lowest occupancy ever admitted (1): wait for slots to drain.
+    * ``shed``   — the SLO is unachievable even alone (predicted solo
+      latency breaches it) or the request has waited past ``max_wait_s``:
+      reject at the door so seated tenants keep their deadlines.
+
+    Best-effort streams (``deadline_s is None``) are always admitted when a
+    slot is free — shedding only ever protects an explicit SLO.
+    """
+
+    def __init__(
+        self,
+        confidence: float = 0.95,
+        max_wait_s: float = math.inf,
+        min_observations: int = 3,
+    ) -> None:
+        self.model = FeaturePredictor()
+        self.confidence = confidence
+        self.max_wait_s = max_wait_s
+        self.min_observations = min_observations
+        self._n_obs = 0
+        self.admitted = 0
+        self.deferred = 0          # unique requests deferred at least once
+        self.shed = 0
+        # in-flight deferred requests by object identity (a deferred request
+        # is alive in the queue, so its id is stable); entries are removed
+        # on the final admit/shed decision, bounding the set
+        self._deferred_inflight: set[int] = set()
+
+    # ---------------- latency model ----------------
+    def observe_step(self, n_active: int, latency: float) -> None:
+        """Feed one engine step: occupancy → measured step latency."""
+        self.model.observe(latency, float(n_active))
+        self._n_obs += 1
+
+    def predict(self, n_active: int) -> Prediction:
+        return self.model.predict(float(n_active))
+
+    def _tail(self, n_active: int) -> float:
+        p = self.predict(n_active)
+        if p.mean != p.mean:          # NaN: no observations yet
+            return 0.0
+        return p.quantile(self.confidence)
+
+    # ---------------- decision ----------------
+    def decide(
+        self, req: StreamRequest, n_active: int, now: float
+    ) -> AdmissionDecision:
+        if req.deadline_s is None:
+            self.admitted += 1
+            return AdmissionDecision(ADMIT, None, "best-effort")
+        if self._n_obs < self.min_observations:
+            # cold start: no basis for prediction — admit and learn
+            self.admitted += 1
+            return AdmissionDecision(ADMIT, None, "cold-start")
+
+        waited = now - req.arrival_s
+        pred_joined = self.predict(n_active + 1)
+        tail_joined = self._tail(n_active + 1)
+        if tail_joined <= req.deadline_s:
+            self.admitted += 1
+            self._deferred_inflight.discard(id(req))
+            return AdmissionDecision(
+                ADMIT, pred_joined,
+                f"p{self.confidence*100:.0f} step {tail_joined*1e3:.2f}ms "
+                f"<= SLO {req.deadline_s*1e3:.2f}ms at occupancy {n_active + 1}",
+            )
+        if waited > self.max_wait_s:
+            self.shed += 1
+            self._deferred_inflight.discard(id(req))
+            return AdmissionDecision(
+                SHED, pred_joined,
+                f"waited {waited:.3f}s > max_wait {self.max_wait_s:.3f}s",
+            )
+        tail_solo = self._tail(1)
+        if tail_solo > req.deadline_s:
+            self.shed += 1
+            self._deferred_inflight.discard(id(req))
+            return AdmissionDecision(
+                SHED, pred_joined,
+                f"SLO {req.deadline_s*1e3:.2f}ms unachievable: solo "
+                f"p{self.confidence*100:.0f} step is {tail_solo*1e3:.2f}ms",
+            )
+        # a head-of-line request is re-decided every drain iteration while
+        # it waits: count it once, like admitted/shed per-request counters
+        if id(req) not in self._deferred_inflight:
+            self._deferred_inflight.add(id(req))
+            self.deferred += 1
+        return AdmissionDecision(
+            DEFER, pred_joined,
+            f"p{self.confidence*100:.0f} step {tail_joined*1e3:.2f}ms "
+            f"> SLO {req.deadline_s*1e3:.2f}ms at occupancy {n_active + 1}",
+        )
+
+
+class AlwaysAdmit:
+    """Null controller: every request is seated as soon as a slot frees.
+    The benchmark's no-admission-control baseline."""
+
+    def __init__(self) -> None:
+        self.admitted = 0
+        self.deferred = 0
+        self.shed = 0
+
+    def observe_step(self, n_active: int, latency: float) -> None:
+        pass
+
+    def predict(self, n_active: int) -> Prediction:
+        return Prediction(float("nan"), float("nan"))
+
+    def decide(
+        self, req: StreamRequest, n_active: int, now: float
+    ) -> AdmissionDecision:
+        self.admitted += 1
+        return AdmissionDecision(ADMIT, None, "always-admit")

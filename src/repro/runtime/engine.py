@@ -96,16 +96,26 @@ class Engine:
         ``max_new_tokens`` greedily.  Returns (B, max_new_tokens)."""
         state = self.init_state()
         b, plen = prompt.shape
-        assert b == self.cfg.batch
+        if b != self.cfg.batch:
+            raise ValueError(
+                f"prompt batch {b} != engine batch {self.cfg.batch}"
+            )
+        if plen < 1:
+            raise ValueError(
+                "prompt must contain at least one token per sequence "
+                f"(got prompt_len={plen}); the decode loop is seeded from "
+                "the last prompt token"
+            )
 
-        toks = jnp.asarray(prompt[:, 0])
         # --- prompt phase (not latency-scored: the paper scores steady state)
         for t in range(plen):
             toks_in = jnp.asarray(prompt[:, t])
             nxt, _, state = self._step(params, state, toks_in)
         jax.block_until_ready(nxt)
 
-        # --- decode phase (scored)
+        # --- decode phase (scored after warmup; warmup steps *seed* the
+        # deadline policy so the first scored job is never compared against
+        # an unseeded — infinite or degenerate — deadline)
         out = np.zeros((b, max_new_tokens), np.int32)
         cur = nxt
         for i in range(max_new_tokens):
@@ -119,13 +129,13 @@ class Engine:
                 host = np.asarray(nxt)
                 out[:, i] = host
             rec = timer.finish()
+            lat = rec.end_to_end
             if i >= self.cfg.warmup_steps:
                 self.recorder.add(rec)
-                lat = rec.end_to_end
                 self.jobs += 1
                 if lat > self.policy.deadline():
                     self.misses += 1
-                self.policy.observe(lat)
+            self.policy.observe(lat)
             cur = nxt
         return out, self.recorder
 

@@ -1,4 +1,8 @@
 """Runtime scheduling simulation (paper Insight 4)."""
+from .contention import contention_curve, contention_tasks
 from .simulator import SimConfig, SimResult, StageSpec, TaskSpec, simulate
 
-__all__ = ["SimConfig", "SimResult", "StageSpec", "TaskSpec", "simulate"]
+__all__ = [
+    "SimConfig", "SimResult", "StageSpec", "TaskSpec", "simulate",
+    "contention_curve", "contention_tasks",
+]

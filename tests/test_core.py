@@ -177,3 +177,54 @@ def test_variance_reduction_report():
     rep = variance_reduction(before, after)
     assert rep["cv_after"] < 1e-9
     assert rep["cv_reduction_x"] > 100 or math.isinf(rep["cv_reduction_x"])
+
+
+# ------------------------------------------------- reset regressions -------
+def test_reset_preserves_policy_configuration():
+    """Regression: reset() used to re-run __init__() with defaults, silently
+    discarding margins / windows / noise parameters."""
+    m = MeanDeadline(margin=1.5)
+    m.observe(1.0)
+    m.reset()
+    assert m.margin == 1.5
+    m.observe(2.0)
+    assert m.deadline() == pytest.approx(3.0)          # 2.0 * preserved margin
+
+    w = WorstObserved(margin=2.0)
+    w.observe(1.0)
+    w.reset()
+    assert w.margin == 2.0 and math.isinf(w.deadline())
+    w.observe(0.5)
+    assert w.deadline() == pytest.approx(1.0)
+
+    p = PercentileDeadline(q=90.0, window=4)
+    for x in (1.0, 2.0):
+        p.observe(x)
+    p.reset()
+    assert (p.q, p.window) == (90.0, 4)
+    assert math.isinf(p.deadline())
+
+    k = KalmanDeadline(q=1e-5, r=1e-3, k_sigma=2.0)
+    k.observe(0.1)
+    k.reset()
+    assert (k.q, k.r, k.k_sigma) == (1e-5, 1e-3, 2.0)
+    assert math.isinf(k.deadline())
+
+    d = DynamicDeadline(alpha=0.2, headroom=3.0)
+    d.observe(0.1)
+    d.set_criticality(0.5)
+    d.reset()
+    assert (d.alpha, d.headroom) == (0.2, 3.0)
+    d.observe(0.1)
+    assert d.deadline() == pytest.approx(0.1 * 3.0)    # criticality reset to 1
+
+
+def test_percentile_window_is_bounded_deque():
+    """Regression: the sliding window was an O(n) list.pop(0); it must hold
+    exactly ``window`` most-recent observations."""
+    p = PercentileDeadline(q=100.0, window=8)
+    for x in range(100):
+        p.observe(float(x))
+    assert len(p._buf) == 8
+    assert list(p._buf) == [float(x) for x in range(92, 100)]
+    assert p.deadline() == pytest.approx(99.0)

@@ -121,6 +121,34 @@ def test_rwkv6_strong_decay_no_overflow():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
 
 
+def test_rwkv6_rejects_degenerate_chunk():
+    b, s, h, dk = 1, 80, 1, 16
+    args = (rand(10, (b, s, h, dk)),) * 3 + (
+        -jax.nn.softplus(rand(13, (b, s, h, dk))), rand(14, (h, dk)))
+    with pytest.raises(ValueError, match="multiple"):
+        rwkv6_wkv_fwd(*args, chunk=40, interpret=True)
+
+
+def test_rwkv6_chunk_invariance_strong_decay():
+    """Regression: at chunk=64 with strong decay the carry state drifted
+    past the oracle tolerance (large chunk-local cumsum cancellation).  The
+    kernel folds state through ≤32-wide f32 sub-tiles, so every chunk size
+    that is a multiple of the state tile performs the identical fold
+    sequence and must agree to f32 rounding."""
+    b, s, h, dk = 1, 128, 1, 64
+    r = rand(10, (b, s, h, dk))
+    k = rand(11, (b, s, h, dk))
+    v = rand(12, (b, s, h, dk))
+    logw = -jax.nn.softplus(rand(13, (b, s, h, dk)) * 6.0)
+    u = rand(14, (h, dk))
+    outs = [
+        np.asarray(rwkv6_wkv_fwd(r, k, v, logw, u, chunk=c, interpret=True))
+        for c in (32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
 # --------------------------------------------------------------- mamba2 ----
 @pytest.mark.parametrize("b,s,h,p,n", [(1, 64, 4, 16, 16), (2, 128, 8, 16, 24)])
 @pytest.mark.parametrize("chunk", [16, 32])

@@ -1,0 +1,277 @@
+"""Unit tests for the multi-tenant serving runtime: continuous batching in
+fixed-capacity padded slots, per-tenant accounting, deadline-aware
+admission control, and the Poisson load-generator plumbing.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bus import SimClock
+from repro.configs import get_config
+from repro.models import Model
+from repro.runtime import (
+    AdmissionController,
+    AlwaysAdmit,
+    MultiTenantConfig,
+    MultiTenantEngine,
+    RequestQueue,
+    StreamRequest,
+    poisson_workload,
+)
+from repro.runtime.admission import ADMIT, DEFER, SHED
+
+
+def make_engine(capacity=4, context=64, warmup=0, admission=None, **cfg_over):
+    cfg = get_config("rwkv6-3b", smoke=True).replace(
+        num_layers=2, vocab_size=64, **cfg_over
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = MultiTenantEngine(
+        model, params,
+        MultiTenantConfig(capacity=capacity, context=context, warmup_steps=warmup),
+        admission=admission,
+    )
+    return cfg, eng
+
+
+def req(tenant, prompt, n=4, deadline=None, arrival=0.0):
+    return StreamRequest(
+        tenant=tenant, prompt=np.asarray(prompt, np.int32),
+        max_new_tokens=n, deadline_s=deadline, arrival_s=arrival,
+    )
+
+
+# ------------------------------------------------------ request validation -
+def test_stream_request_validation():
+    with pytest.raises(ValueError, match="at least one token"):
+        req("t", [])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        req("t", [1, 2], n=0)
+    with pytest.raises(ValueError, match="at least one token"):
+        StreamRequest(tenant="t", prompt=np.ones((2, 2), np.int32), max_new_tokens=1)
+
+
+def test_request_queue_fifo_and_accounting():
+    q = RequestQueue()
+    a, b, c = req("a", [1]), req("b", [2]), req("c", [3])
+    for r in (a, b, c):
+        q.push(r)
+    assert len(q) == 3 and q.pushed == 3
+    first = q.pop()
+    assert first is a
+    q.requeue(first)                    # deferred: back at the head
+    assert q.pop() is a and q.pop() is b
+    assert q.pop() is c and not q
+
+
+# --------------------------------------------------- static shapes / slots -
+def test_join_leave_keeps_shapes_static():
+    """Streams joining and leaving mid-flight must never retrace the jitted
+    serve step — the whole point of fixed-capacity padded slots."""
+    _, eng = make_engine(capacity=3)
+    eng.compile()
+    eng.join(req("a", [1, 2], n=6))
+    for _ in range(3):
+        eng.step()
+    eng.join(req("b", [3], n=2))        # join mid-flight
+    while eng.active:
+        eng.step()
+    eng.join(req("c", [5, 6, 7], n=3))  # rejoin after full drain
+    while eng.active:
+        eng.step()
+    assert eng.trace_count == 1
+    assert len(eng.finished) == 3
+    assert all(len(t.generated) == t.req.max_new_tokens for t in eng.finished)
+
+
+def test_zero_capacity_config_rejected():
+    with pytest.raises(ValueError, match="capacity"):
+        MultiTenantConfig(capacity=0, context=64)
+    with pytest.raises(ValueError, match="context"):
+        MultiTenantConfig(capacity=2, context=0)
+
+
+def test_join_full_batch_raises():
+    _, eng = make_engine(capacity=1)
+    eng.join(req("a", [1], n=2))
+    with pytest.raises(RuntimeError, match="no free slot"):
+        eng.join(req("b", [2], n=2))
+
+
+def test_slot_carveout_isolates_tenants():
+    """A slot's recurrent state is reset on join: a stream must generate
+    the same tokens whether it follows another tenant in the slot or runs
+    in a fresh engine (exact for recurrent-state families)."""
+    prompt = [7, 11, 13]
+
+    _, eng = make_engine(capacity=1)
+    eng.join(req("first", [3, 5, 2, 9], n=8))
+    while eng.active:
+        eng.step()
+    eng.join(req("second", prompt, n=8))
+    while eng.active:
+        eng.step()
+    reused = next(t for t in eng.finished if t.req.tenant == "second").generated
+
+    _, fresh_eng = make_engine(capacity=1)
+    fresh_eng.join(req("second", prompt, n=8))
+    while fresh_eng.active:
+        fresh_eng.step()
+    fresh = fresh_eng.finished[0].generated
+
+    assert reused == fresh
+
+
+# ----------------------------------------------------- per-tenant scoring --
+def test_per_tenant_miss_accounting():
+    """Co-resident tenants share each step's latency but are scored against
+    their own deadlines: an impossible SLO misses every job, a generous one
+    misses none — on the very same steps."""
+    _, eng = make_engine(capacity=2)
+    eng.compile()
+    eng.join(req("tight", [1, 2], n=5, deadline=1e-12))
+    eng.join(req("loose", [3, 4], n=5, deadline=1e6))
+    while eng.active:
+        eng.step()
+    rows = {r["tenant"]: r for r in eng.per_tenant_report()}
+    assert rows["tight"]["jobs"] == rows["loose"]["jobs"] == 4
+    assert rows["tight"]["misses"] == 4 and rows["tight"]["miss_rate"] == 1.0
+    assert rows["loose"]["misses"] == 0 and rows["loose"]["miss_rate"] == 0.0
+    # per-tenant recorders carry the occupancy metadata for attribution
+    t = next(x for x in eng.finished if x.req.tenant == "tight")
+    assert set(t.recorder.meta_series("n_active")) == {2.0}
+
+
+def test_ramp_steps_are_not_scored_jobs():
+    """Prompt feeding (ramp) seeds the tenant's deadline policy but is not
+    scored: jobs = max_new_tokens - 1 (the transition step that produces
+    the first token is still ramp), minus nothing else at warmup=0."""
+    _, eng = make_engine(capacity=1)
+    eng.compile()
+    eng.join(req("a", [1, 2, 3, 4], n=6))
+    steps = 0
+    while eng.active:
+        eng.step()
+        steps += 1
+    ts = eng.finished[0]
+    assert steps == 4 + 5               # 4 ramp (incl. first-token step) + 5 decode
+    assert ts.ramp_steps == 4
+    assert ts.jobs == 5
+    assert len(ts.generated) == 6
+    # every step (ramp included) seeded the policy
+    assert ts.policy._w.n == steps
+
+
+# ------------------------------------------------------- admission control -
+def warmed_controller(**kw):
+    ctrl = AdmissionController(**kw)
+    # occupancy→latency profile: 10ms solo, +10ms per extra co-resident
+    for occ, lat in [(1, 0.010), (1, 0.0101), (2, 0.020), (2, 0.0201),
+                     (3, 0.030), (3, 0.0301)]:
+        ctrl.observe_step(occ, lat)
+    return ctrl
+
+
+def test_admission_decisions_admit_defer_shed():
+    ctrl = warmed_controller(confidence=0.9)
+    # best-effort: always admitted
+    assert ctrl.decide(req("be", [1]), n_active=3, now=0.0).action == ADMIT
+    # generous SLO at low occupancy: admitted
+    assert ctrl.decide(req("ok", [1], deadline=0.05), 1, 0.0).action == ADMIT
+    # SLO feasible solo but not at the prospective occupancy: deferred
+    d = ctrl.decide(req("mid", [1], deadline=0.015), 2, 0.0)
+    assert d.action == DEFER and "occupancy 3" in d.reason
+    # SLO below even the solo latency: shed at the door
+    s = ctrl.decide(req("impossible", [1], deadline=0.001), 0, 0.0)
+    assert s.action == SHED and "unachievable" in s.reason
+    assert ctrl.admitted == 2 and ctrl.deferred == 1 and ctrl.shed == 1
+
+
+def test_admission_sheds_after_max_wait():
+    ctrl = warmed_controller(confidence=0.9, max_wait_s=0.5)
+    old = req("waited", [1], deadline=0.015, arrival=0.0)
+    assert ctrl.decide(old, 2, now=0.1).action == DEFER
+    assert ctrl.decide(old, 2, now=0.2).action == DEFER
+    assert ctrl.deferred == 1           # per-request, not per-decision
+    assert ctrl.decide(old, 2, now=1.0).action == SHED
+
+
+def test_drain_with_source_requires_clock():
+    _, eng = make_engine(capacity=1)
+
+    class FakeSource:
+        def deliver_until(self, t):
+            return 0
+
+        def next_delivery(self):
+            return None
+
+    with pytest.raises(ValueError, match="needs a clock"):
+        eng.drain(RequestQueue(), source=FakeSource())
+
+
+def test_admission_cold_start_admits_and_learns():
+    ctrl = AdmissionController(min_observations=3)
+    assert ctrl.decide(req("a", [1], deadline=1e-9), 0, 0.0).action == ADMIT
+    for _ in range(3):
+        ctrl.observe_step(1, 0.01)
+    assert ctrl.decide(req("b", [1], deadline=1e-9), 0, 0.0).action == SHED
+
+
+def test_engine_sheds_under_synthetic_overload():
+    """Under overload with unachievable SLOs, the admission controller
+    protects the engine: infeasible streams are shed at the queue, feasible
+    ones are served with zero misses."""
+    _, eng = make_engine(capacity=2, admission=AdmissionController())
+    eng.compile()
+    # warm the latency model with a best-effort probe
+    probe = RequestQueue()
+    probe.push(req("probe", [1, 2], n=6))
+    eng.drain(probe)
+
+    queue = RequestQueue()
+    for i in range(4):
+        queue.push(req(f"tight-{i}", [i + 1], n=4, deadline=1e-12))
+    for i in range(4):
+        queue.push(req(f"loose-{i}", [i + 1], n=4, deadline=1e6))
+    eng.drain(queue)
+
+    rows = {r["tenant"]: r for r in eng.per_tenant_report()}
+    assert len(eng.shed) == 4
+    assert all(rows[f"tight-{i}"]["status"] == "shed" for i in range(4))
+    served = [rows[f"loose-{i}"] for i in range(4)]
+    assert all(r["status"] == "finished" and r["misses"] == 0 for r in served)
+    assert eng.aggregate_report()["shed_streams"] == 4
+
+
+# ------------------------------------------------------- load generation ---
+def test_poisson_workload_is_deterministic_and_ordered():
+    a = poisson_workload(16, rate_hz=50.0, vocab_size=64, seed=3)
+    b = poisson_workload(16, rate_hz=50.0, vocab_size=64, seed=3)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr) and arr[0] > 0
+    assert len({r.tenant for r in a}) == 16
+    np.testing.assert_array_equal(a[4].prompt, b[4].prompt)
+
+
+def test_drain_with_sim_clock_advances_time():
+    _, eng = make_engine(capacity=2)
+    eng.compile()
+    q = RequestQueue()
+    for r in poisson_workload(5, rate_hz=1000.0, vocab_size=64,
+                              prompt_len=3, max_new_tokens=4, seed=0):
+        q.push(r)
+    clock = SimClock()
+    steps = eng.drain(q, clock=clock)
+    assert steps == eng.steps > 0
+    assert clock.time() == pytest.approx(
+        sum(lat for _, lat in eng.step_log), rel=1e-9
+    )
+    assert len(eng.finished) == 5
+    agg = eng.aggregate_report()
+    assert agg["streams"] == 5 and agg["traces"] == 1
+    assert math.isfinite(agg["step_mean_s"])

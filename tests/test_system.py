@@ -132,6 +132,33 @@ def test_engine_generates_and_reports():
     assert rep["jobs"] == 5 and math.isfinite(rep["mean_s"])
 
 
+def test_engine_rejects_empty_prompt_and_seeds_policy_from_warmup():
+    """Regression: a zero-length prompt used to raise NameError deep in the
+    decode loop, and the first post-warmup job was scored against a
+    never-observed (infinite/degenerate) deadline."""
+    from repro.core.deadline import MeanDeadline
+    from repro.runtime import Engine, ServeConfig
+
+    cfg = get_config("rwkv6-3b", smoke=True).replace(num_layers=2, vocab_size=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = MeanDeadline(margin=1.5)
+    eng = Engine(model, ServeConfig(batch=2, context=64, warmup_steps=2),
+                 deadline_policy=policy)
+
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.generate(params, np.zeros((2, 0), np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError, match="batch"):
+        eng.generate(params, np.zeros((3, 2), np.int32), max_new_tokens=4)
+
+    out, _ = eng.generate(params, np.ones((2, 2), np.int32), max_new_tokens=6)
+    assert out.shape == (2, 6)
+    # all 6 decode steps observed (warmup included: they seed the policy),
+    # but only the post-warmup 4 are scored as jobs
+    assert policy._w.n == 6
+    assert eng.jobs == 4
+
+
 def test_checkpoint_roundtrip(tmp_path):
     from repro.train import latest_step, load_checkpoint, save_checkpoint
     from repro.train.optimizer import adamw_init
