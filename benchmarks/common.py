@@ -40,5 +40,22 @@ def latency_row(name: str, xs, extra: dict | None = None) -> dict:
     return row
 
 
+# machine-readable mirror of every csv_line() emitted since the last drain;
+# benchmarks/run.py drains this per module into BENCH_results.json
+RESULTS: list[dict] = []
+
+
 def csv_line(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"CSV,{name},{us_per_call:.2f},{derived}")
+    RESULTS.append({
+        "name": name,
+        "us_per_call": float(us_per_call),
+        "derived": derived,
+    })
+
+
+def drain_results() -> list[dict]:
+    """Return and clear the accumulated csv_line records."""
+    out = list(RESULTS)
+    RESULTS.clear()
+    return out

@@ -1,9 +1,15 @@
 """Benchmark driver: one module per paper table/figure (DESIGN.md §7).
 
-Prints each benchmark's table plus ``CSV,name,us_per_call,derived`` lines.
+Prints each benchmark's table plus ``CSV,name,us_per_call,derived`` lines,
+and mirrors every CSV record into a machine-readable ``BENCH_results.json``
+(per-benchmark ``us_per_call`` + derived metrics, wall time, status) so
+the perf trajectory is trackable across commits.  Override the output
+path with ``BENCH_RESULTS_PATH``.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
@@ -21,6 +27,7 @@ MODULES = [
     "fig16_system",
     "multi_tenant",
     "static_fix",
+    "anytime",
     "roofline",
 ]
 
@@ -28,18 +35,36 @@ MODULES = [
 def main() -> int:
     import importlib
 
+    from .common import drain_results
+
     only = sys.argv[1:] or MODULES
     failures = []
+    report: dict[str, dict] = {}
     for name in only:
-        mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         print(f"\n######## {name} ########", flush=True)
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            drain_results()                 # import-time noise, if any
+            t0 = time.time()
             mod.run()
+            status = "ok"
             print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures.append(name)
+            status = "failed"
             traceback.print_exc()
+        report[name] = {
+            "status": status,
+            "wall_s": round(time.time() - t0, 3),
+            "results": drain_results(),
+        }
+
+    path = os.environ.get("BENCH_RESULTS_PATH", "BENCH_results.json")
+    with open(path, "w") as f:
+        json.dump({"benchmarks": report, "failures": failures}, f, indent=2)
+    print(f"\nwrote {path} ({sum(len(v['results']) for v in report.values())} records)")
+
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
         return 1

@@ -1,0 +1,141 @@
+"""Per-frame, per-rung latency cost model.
+
+The paper's Insights 1/3: host post-processing time is driven by
+observable, temporally-coherent scene quantities (proposal counts, scene
+density, rain).  So each rung's latency is predicted per stage with the
+estimator that fits the stage's behaviour:
+
+* read / pre-processing / inference — near-stationary per rung: tracked
+  with the online ``KalmanPredictor`` (ALERT-style), which also adapts
+  when contention drifts the whole pipeline.
+* post-processing — data-dependent: ``FeaturePredictor`` regresses post
+  time on the *composite scene feature* (previous frame's proposal count,
+  or a scenario-density × rain prior before any frame has run).
+
+Predictions are Gaussians combined across stages (independent-stage
+variance sum), exposed as ``Prediction`` so the controller reasons about
+p99 quantiles, not just means.  Before a rung has been observed online,
+the calibrated ``stage_means`` serve as the prior (a configurable prior
+CV supplies the spread).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.predictor import FeaturePredictor, KalmanPredictor, Prediction
+from repro.core.timing import StageRecord
+from repro.perception.data import SCENARIOS
+
+from .ladder import Ladder, Rung
+
+__all__ = ["SceneFeatures", "RungCostModel", "LadderCostModel"]
+
+# bright 8×8 cells one object contributes to the proposal map, roughly
+_CELLS_PER_OBJECT = 5.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneFeatures:
+    """Observable pre-execution signals for one frame."""
+
+    proposals_prev: Optional[float] = None   # previous frame's proposal count
+    rain_mm_per_hour: float = 0.0
+    scenario: str = "city"
+
+    def composite(self) -> float:
+        """Scalar feature for the post-processing regression: the previous
+        frame's proposal count when available (scenes are temporally
+        coherent), else a scenario-density prior attenuated by rain
+        (Table IV: rain occludes proposals)."""
+        if self.proposals_prev is not None:
+            return float(self.proposals_prev)
+        mu_obj = SCENARIOS.get(self.scenario, (6.0, 3.0))[0]
+        atten = max(1.0 - self.rain_mm_per_hour / 400.0, 0.25)
+        return _CELLS_PER_OBJECT * mu_obj * atten
+
+
+class RungCostModel:
+    """Per-stage online predictors for one rung.
+
+    The Kalman noise parameters are scaled for millisecond stage
+    latencies (the predictor defaults assume ~100ms signals; a 10ms
+    measurement-noise floor would drown a 3ms stage and make every tail
+    estimate worst-case).
+    """
+
+    def __init__(
+        self,
+        rung: Rung,
+        prior_cv: float = 0.25,
+        kalman_q: float = 1e-9,
+        kalman_r: float = 1e-7,
+    ) -> None:
+        if not rung.stage_means:
+            # a zero prior would make every budget "fit" — fail loudly
+            raise ValueError(
+                f"rung {rung.name!r} is uncalibrated (no stage_means); "
+                "run anytime.calibrate() before building a cost model"
+            )
+        self.rung = rung
+        self.prior_cv = prior_cv
+        self._host = KalmanPredictor(q=kalman_q, r=kalman_r)   # read + pre
+        self._infer = KalmanPredictor(q=kalman_q, r=kalman_r)
+        self._post = FeaturePredictor()
+        self.observations = 0
+
+    def observe(self, record: StageRecord, feats: SceneFeatures) -> None:
+        """Feed one measured frame.  ``feats`` must be the features the
+        caller *predicted with* for this frame, so the regression learns
+        the deployable mapping (prev-frame proposals → this post time)."""
+        st = record.stages
+        self._host.observe(st.get("read", 0.0) + st.get("pre_processing", 0.0))
+        self._infer.observe(st.get("inference", 0.0))
+        self._post.observe(st.get("post_processing", 0.0), feats.composite())
+        self.observations += 1
+
+    def _stage_prior(self, *stages: str) -> Prediction:
+        mean = sum(self.rung.stage_means.get(s, 0.0) for s in stages)
+        if math.isnan(mean):
+            mean = 0.0
+        return Prediction(mean, self.prior_cv * mean)
+
+    def _or_prior(self, p: Prediction, *stages: str) -> Prediction:
+        if p.mean != p.mean:          # NaN: predictor has no data yet
+            return self._stage_prior(*stages)
+        # a freshly-seeded predictor reports ~zero spread; keep at least
+        # the prior's uncertainty until residuals accumulate
+        floor = self.prior_cv * max(p.mean, 0.0)
+        if self.observations < 5:
+            prior_std = self._stage_prior(*stages).std
+            floor = max(floor, prior_std)
+        return Prediction(p.mean, max(p.std, floor))
+
+    def predict(self, feats: SceneFeatures) -> Prediction:
+        host = self._or_prior(self._host.predict(), "read", "pre_processing")
+        infer = self._or_prior(self._infer.predict(), "inference")
+        post = self._or_prior(self._post.predict(feats.composite()), "post_processing")
+        mean = host.mean + infer.mean + post.mean
+        std = math.sqrt(host.std ** 2 + infer.std ** 2 + post.std ** 2)
+        return Prediction(mean, std)
+
+
+class LadderCostModel:
+    """One ``RungCostModel`` per rung, addressed by rung name."""
+
+    def __init__(self, ladder: Ladder, prior_cv: float = 0.25) -> None:
+        self.ladder = ladder
+        self._models = {r.name: RungCostModel(r, prior_cv) for r in ladder}
+
+    def model(self, rung_name: str) -> RungCostModel:
+        return self._models[rung_name]
+
+    def observe(self, rung_name: str, record: StageRecord, feats: SceneFeatures) -> None:
+        self._models[rung_name].observe(record, feats)
+
+    def predict(self, rung_name: str, feats: SceneFeatures) -> Prediction:
+        return self._models[rung_name].predict(feats)
+
+    def quantile(self, rung_name: str, feats: SceneFeatures, q: float) -> float:
+        return self.predict(rung_name, feats).quantile(q)

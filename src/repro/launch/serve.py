@@ -13,6 +13,14 @@ Poisson process on the bus broker's simulated clock, are admitted into
 CV, p99, miss rate per stream::
 
     python -m repro.launch.serve --arch rwkv6-3b --smoke --streams 8
+
+``--anytime`` enables degrade-before-shed admission: a stream whose SLO
+is unachievable is retried down its SLO-relaxation ladder
+(``--degrade-factors``) and seated at the first achievable level instead
+of being rejected at the door::
+
+    python -m repro.launch.serve --arch rwkv6-3b --smoke --streams 8 \
+        --slo-ms 5 --anytime
 """
 from __future__ import annotations
 
@@ -71,6 +79,7 @@ def serve_multi_tenant(args, cfg, model, params) -> None:
     broker.subscribe("requests", callback=lambda env: queue.push(env.payload),
                      queue_size=0)
 
+    degrade = args.degrade_factors_parsed if args.anytime else ()
     workload = poisson_workload(
         args.streams,
         rate_hz=args.arrival_rate,
@@ -79,6 +88,7 @@ def serve_multi_tenant(args, cfg, model, params) -> None:
         max_new_tokens=args.tokens,
         deadline_s=args.slo_ms * 1e-3 if args.slo_ms is not None else None,
         seed=0,
+        degrade_factors=degrade,
     )
     for req in workload:
         broker.publish("requests", req, size_bytes=4 * req.prompt.size,
@@ -93,13 +103,15 @@ def serve_multi_tenant(args, cfg, model, params) -> None:
         MultiTenantConfig(capacity=args.batch, context=args.context),
         admission=admission,
         policy_factory=lambda req: POLICY[args.deadline](),
+        anytime=args.anytime,
     )
     eng.compile()
     eng.drain(queue, clock=clock, source=broker)
 
     agg = eng.aggregate_report()
     print(
-        f"served {agg['streams']} streams ({agg['shed_streams']} shed) in "
+        f"served {agg['streams']} streams ({agg['shed_streams']} shed, "
+        f"{agg['degraded_streams']} degraded) in "
         f"{agg['steps']} steps over {clock.time():.3f}s simulated; "
         f"traces={agg['traces']}"
     )
@@ -142,7 +154,32 @@ def main() -> None:
                     help="per-token SLO; enables deadline-aware shedding")
     ap.add_argument("--admission", choices=["none", "predictive"],
                     default="predictive")
+    ap.add_argument("--anytime", action="store_true",
+                    help="degrade-before-shed: a stream about to be shed is "
+                         "retried down its SLO-relaxation ladder first")
+    ap.add_argument("--degrade-factors", default="1.5,2.5",
+                    help="comma-separated SLO relaxation factors tried (in "
+                         "order) by --anytime before shedding")
     args = ap.parse_args()
+
+    if args.anytime and args.admission == "none":
+        ap.error("--anytime needs the predictive admission controller "
+                 "(an always-admit engine never sheds, so there is nothing "
+                 "to degrade); drop --admission none")
+    if args.anytime and args.slo_ms is None:
+        ap.error("--anytime degrades per-token SLOs before shedding; "
+                 "set --slo-ms")
+    if args.degrade_factors != ap.get_default("degrade_factors") and not args.anytime:
+        ap.error("--degrade-factors has no effect without --anytime")
+    try:
+        args.degrade_factors_parsed = tuple(
+            float(f) for f in args.degrade_factors.split(",") if f.strip()
+        )
+    except ValueError:
+        ap.error("--degrade-factors must be comma-separated numbers "
+                 f"(got {args.degrade_factors!r})")
+    if args.anytime and not args.degrade_factors_parsed:
+        ap.error("--anytime needs at least one --degrade-factors entry")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if not cfg.supports_decode:

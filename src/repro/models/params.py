@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Callable, Mapping
 
 import jax
@@ -77,7 +78,10 @@ def init_params(
         out = {}
         for name in sorted(node):
             sub = node[name]
-            k = jax.random.fold_in(key, hash(name) % (2**31))
+            # crc32, not hash(): str hashes are salted per process
+            # (PYTHONHASHSEED), which silently broke the determinism this
+            # docstring promises — same key, different params every run
+            k = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2**31))
             if _is_spec(sub):
                 out[name] = _init_leaf(k, sub, dtype)
             else:

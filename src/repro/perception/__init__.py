@@ -4,10 +4,16 @@ from .detector import OneStageDetector, TwoStageDetector, dynamic_nms, static_nm
 from .lane import LaneDetector
 from .fusion import ApproxTimeSynchronizer, FusionEvent
 from .pipelines import (
+    PIPELINES,
+    BuiltPipeline,
+    FrameOutput,
+    build_pipeline,
     preprocess,
+    run_frame,
     run_lane,
     run_lane_static,
     run_one_stage,
+    run_pipeline,
     run_two_stage,
 )
 
@@ -15,5 +21,7 @@ __all__ = [
     "SCENARIOS", "Scene", "SceneConfig", "generate_scene", "scene_stream",
     "OneStageDetector", "TwoStageDetector", "dynamic_nms", "static_nms",
     "LaneDetector", "ApproxTimeSynchronizer", "FusionEvent",
-    "preprocess", "run_lane", "run_lane_static", "run_one_stage", "run_two_stage",
+    "PIPELINES", "BuiltPipeline", "FrameOutput", "build_pipeline",
+    "preprocess", "run_frame", "run_lane", "run_lane_static",
+    "run_one_stage", "run_pipeline", "run_two_stage",
 ]

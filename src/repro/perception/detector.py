@@ -9,10 +9,15 @@ variability axis (Insight 3), implemented so the *mechanism* is explicit:
   list → per-proposal second stage + O(n²) host NMS.  Post-processing time
   scales with the proposal count — the paper's LaneNet/Faster-R-CNN
   pathology, faithfully reproduced.
+* early exit: the one-stage detector truncated after ``depth`` backbone
+  convs (remaining stride recovered by average pooling) with a coarser
+  objectness grid — the anytime ladder's cheapest rung: less compute,
+  coarser localization.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -49,23 +54,39 @@ def _conv(x, w, stride):
     )
 
 
-def backbone_apply(params, image: jax.Array) -> jax.Array:
-    """(B, 96, 320, 3) → (B, 12, 40, C) feature map (3 stride-2 convs)."""
+def backbone_apply(params, image: jax.Array, depth: int = 3) -> jax.Array:
+    """(B, 96, 320, 3) → (B, 12, 40, C) feature map.
+
+    ``depth`` backbone convs run (stride 2 each); an early exit (depth < 3)
+    recovers the remaining stride by average pooling, so the head always
+    sees the canonical (12, 40) grid while skipping most of the FLOPs.
+    """
     x = image
-    for i, name in enumerate(("conv1", "conv2", "conv3")):
+    for name in ("conv1", "conv2", "conv3")[:depth]:
         x = _conv(x, params[name], 2)
         x = jax.nn.relu(x)
+    rem = 2 ** (3 - depth)
+    if rem > 1:
+        b, h, w, c = x.shape
+        x = x[:, : h // rem * rem, : w // rem * rem]   # crop to the tile grid
+        x = x.reshape(b, h // rem, rem, w // rem, rem, c).mean((2, 4))
     return x
 
 
-def _pool8(img: jax.Array, mode: str = "avg") -> jax.Array:
-    """(H, W, 3) → (H/8, W/8) pooled luma."""
+def _pool(img: jax.Array, size: int, mode: str = "avg") -> jax.Array:
+    """(H, W, 3) → (H//size, W//size) pooled luma (border cropped to the
+    tile grid, so any input shape is valid)."""
     luma = img.mean(-1)
     h, w = luma.shape
-    tiles = luma.reshape(h // 8, 8, w // 8, 8)
+    luma = luma[: h // size * size, : w // size * size]
+    tiles = luma.reshape(h // size, size, w // size, size)
     if mode == "avg":
         return tiles.mean((1, 3))
     return tiles.max((1, 3))
+
+
+def _pool8(img: jax.Array, mode: str = "avg") -> jax.Array:
+    return _pool(img, 8, mode)
 
 
 # --------------------------------------------------------------------------
@@ -135,18 +156,42 @@ def static_nms(boxes: jax.Array, scores: jax.Array, k: int, iou_thr: float = 0.5
 
 @dataclasses.dataclass
 class OneStageDetector:
-    """YOLO-ish: grid head predicting (obj, dy, dx, dh, dw) per cell.
-    Post-processing is static_nms on the fixed grid — constant time."""
+    """YOLO-ish: grid head predicting (dy, dx, dh, dw) box refinements per
+    cell.  Post-processing is static_nms on the fixed grid — constant time.
+
+    Objectness is the same matched filter the two-stage RPN uses (pooled
+    brightness above the scene floor) so detections line up with the
+    synthetic ground truth and the anytime ladder can score quality
+    against ``Scene.boxes``; the conv head supplies only box refinements.
+
+    ``depth`` < 3 truncates the backbone (early exit) and ``cell`` > 8
+    coarsens the objectness grid — cheaper inference, coarser boxes.
+    """
 
     channels: int = 16
     top_k: int = 32
     score_thr: float = 0.5
+    depth: int = 3               # backbone convs used (< 3 = early exit)
+    cell: int = 8                # objectness grid granularity in pixels
+    obj_thr: float = -1.0        # matched-filter floor; <0 = derive from cell
+
+    def __post_init__(self) -> None:
+        # cell//8 must divide the feature grid; powers of two always do,
+        # e.g. cell=24 (factor 3) would not divide the 40-wide grid
+        if self.cell not in (8, 16, 32):
+            raise ValueError(f"cell must be 8, 16, or 32 (got {self.cell})")
+        if not 1 <= self.depth <= 3:
+            raise ValueError(f"depth must be in [1, 3] (got {self.depth})")
+        if self.obj_thr < 0:
+            # a coarser cell dilutes an object's brightness with background:
+            # lower the floor so part-covered cells still fire
+            self.obj_thr = 0.55 - 0.13 * math.log2(self.cell / 8)
 
     def specs(self) -> dict:
         c = self.channels
         return {
             "backbone": backbone_specs(c),
-            "head": ParamSpec((c, 5), (None, None), scale=1.0),
+            "head": ParamSpec((c, 4), (None, None), scale=1.0),
         }
 
     def init(self, key):
@@ -155,14 +200,26 @@ class OneStageDetector:
     def infer(self, params, image: jax.Array):
         """Device path: features → grid preds → static top-k+NMS. Returns
         fixed-shape (boxes (k,4), scores (k,), keep (k,))."""
-        feat = backbone_apply(params["backbone"], image[None])[0]
+        feat = backbone_apply(params["backbone"], image[None], depth=self.depth)[0]
         preds = jnp.einsum("hwc,co->hwo", feat, params["head"])
-        obj = jax.nn.sigmoid(preds[..., 0]).reshape(-1)
-        gy, gx = jnp.meshgrid(jnp.arange(GRID_H), jnp.arange(GRID_W), indexing="ij")
-        cy = (gy.reshape(-1) + 0.5) * 8.0 + preds[..., 1].reshape(-1)
-        cx = (gx.reshape(-1) + 0.5) * 8.0 + preds[..., 2].reshape(-1)
-        bh = 8.0 * jnp.exp(jnp.clip(preds[..., 3].reshape(-1), -2, 2))
-        bw = 12.0 * jnp.exp(jnp.clip(preds[..., 4].reshape(-1), -2, 2))
+        # de-normalize: pipelines standardize the image; recover 0-1 luma
+        img = image - image.min()
+        img = img / jnp.maximum(img.max(), 1e-6)
+        obj2d = jax.nn.sigmoid(12.0 * (_pool(img, self.cell, "avg") - self.obj_thr))
+        gh, gw = obj2d.shape
+        f = self.cell // 8
+        if f > 1:       # coarsen the head to the objectness grid
+            preds = preds[: gh * f, : gw * f]
+            preds = preds.reshape(gh, f, gw, f, 4).mean((1, 3))
+        else:
+            preds = preds[:gh, :gw]
+        obj = obj2d.reshape(-1)
+        gy, gx = jnp.meshgrid(jnp.arange(gh), jnp.arange(gw), indexing="ij")
+        cell = float(self.cell)
+        cy = (gy.reshape(-1) + 0.5) * cell + preds[..., 0].reshape(-1)
+        cx = (gx.reshape(-1) + 0.5) * cell + preds[..., 1].reshape(-1)
+        bh = 1.8 * cell * jnp.exp(jnp.clip(preds[..., 2].reshape(-1), -1, 1))
+        bw = 2.4 * cell * jnp.exp(jnp.clip(preds[..., 3].reshape(-1), -1, 1))
         boxes = jnp.stack([cy - bh / 2, cx - bw / 2, cy + bh / 2, cx + bw / 2], -1)
         tb, ts, keep, _ = static_nms(boxes, obj, self.top_k)
         keep = keep & (ts > self.score_thr)
@@ -222,8 +279,10 @@ class TwoStageDetector:
             out = f @ refine                                # (5,)
             cy = (ys[i] + 0.5) * 8.0 + out[1]
             cx = (xs[i] + 0.5) * 8.0 + out[2]
-            bh = 8.0 * np.exp(np.clip(out[3], -2, 2))
-            bw = 12.0 * np.exp(np.clip(out[4], -2, 2))
+            # box prior matched to the scene generator's object statistics
+            # (the refinement head supplies residuals around it)
+            bh = 16.0 * np.exp(np.clip(out[3], -1, 1))
+            bw = 20.0 * np.exp(np.clip(out[4], -1, 1))
             boxes[i] = (cy - bh / 2, cx - bw / 2, cy + bh / 2, cx + bw / 2)
             scores[i] = 1.0 / (1.0 + np.exp(-out[0]))
         if n:

@@ -3,25 +3,40 @@
 the synthetic scenes, with both the paper-faithful *dynamic* post-processing
 and the static-shape mitigation.
 
+Pipelines are **registry-driven**: each fidelity variant registers a
+factory under a name (``PIPELINES``), the single ``run_pipeline`` runner
+drives any of them through the identical stage-timed loop, and the legacy
+``run_*`` entry points are thin wrappers.  The anytime subsystem
+(``repro.anytime``) addresses rungs by these registry names.
+
 Every run returns a ``TimelineRecorder`` whose records carry the stage
 breakdown plus metadata (``num_proposals``, ``num_objects``) so the
-benchmarks can compute the paper's correlations directly.
+benchmarks can compute the paper's correlations directly; ``collect=True``
+additionally returns per-frame detections in the original image frame so
+quality can be scored against ``Scene.boxes``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional
+from typing import Any, Callable, Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.timing import StageTimer, TimelineRecorder
-from .data import Scene, SceneConfig, generate_scene
+from .data import H, W, Scene, SceneConfig, generate_scene
 from .detector import OneStageDetector, TwoStageDetector
 from .lane import LaneDetector
 
 __all__ = [
+    "FrameOutput",
+    "BuiltPipeline",
+    "PIPELINES",
+    "register_pipeline",
+    "build_pipeline",
+    "run_frame",
+    "run_pipeline",
     "run_one_stage",
     "run_two_stage",
     "run_lane",
@@ -29,28 +44,209 @@ __all__ = [
     "preprocess",
 ]
 
-KEY = jax.random.PRNGKey(7)
+
+def _default_key() -> jax.Array:
+    """Per-run PRNG key, created lazily so importing this module does no
+    JAX work (CLI ``--help`` paths stay cheap)."""
+    return jax.random.PRNGKey(7)
 
 
-def preprocess(image: np.ndarray, scale: float = 1.0) -> np.ndarray:
+def preprocess(image: np.ndarray, scale: float = 1.0, pad: bool = True) -> np.ndarray:
     """Resize (λ scaling, paper Fig. 6) + normalize + color juggling —
-    the real host work of the paper's pre-processing stage."""
+    the real host work of the paper's pre-processing stage.
+
+    ``pad=True`` (legacy) crops/pads the scaled image back to the model's
+    fixed input shape.  ``pad=False`` returns the genuinely smaller scaled
+    image — the anytime ladder's λ rungs use it so a lower scale buys a
+    proportional inference-FLOP reduction, not just fewer bright pixels.
+    """
     img = image
     if scale != 1.0:
         h, w = img.shape[:2]
         nh, nw = max(int(h * scale), 8), max(int(w * scale), 8)
+        if not pad:
+            # detectors pool in 8-px cells; round the unpadded input down
+            # to the cell grid so any λ yields a valid static shape
+            nh, nw = max(nh // 8 * 8, 8), max(nw // 8 * 8, 8)
         ys = (np.arange(nh) * (h / nh)).astype(np.int64)
         xs = (np.arange(nw) * (w / nw)).astype(np.int64)
         img = img[ys][:, xs]
-        # crop/pad back to the model's fixed input (paper: transpose+crop
-        # when the input exceeds the max size — the λ=10 outlier)
-        out = np.zeros(image.shape, np.float32)
-        ch, cw = min(h, nh), min(w, nw)
-        out[:ch, :cw] = img[:ch, :cw]
-        img = out
+        if pad:
+            # crop/pad back to the model's fixed input (paper: transpose+crop
+            # when the input exceeds the max size — the λ=10 outlier)
+            out = np.zeros(image.shape, np.float32)
+            ch, cw = min(h, nh), min(w, nw)
+            out[:ch, :cw] = img[:ch, :cw]
+            img = out
     img = img[..., ::-1]                      # BGR↔RGB convert (paper's cvt)
     img = (img - img.mean()) / (img.std() + 1e-6)
     return img.astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameOutput:
+    """One frame's host-side result: detections mapped back to the
+    original (unscaled) image frame plus the paper's variance covariates."""
+
+    boxes: np.ndarray            # (k, 4) detections, original image coords
+    num_objects: float
+    num_proposals: float
+
+
+@dataclasses.dataclass
+class BuiltPipeline:
+    """A pipeline variant ready to run: a jitted device stage and a host
+    post stage.  The runner owns the timing; this owns the compute."""
+
+    name: str
+    scale: float
+    infer: Callable[[jax.Array], Any]        # device stage (jitted)
+    post: Callable[[Any], FrameOutput]       # host post-processing stage
+    pad: bool = True                         # False: truly smaller λ input
+
+
+PIPELINES: Dict[str, Callable[..., BuiltPipeline]] = {}
+
+
+def register_pipeline(name: str):
+    def deco(factory: Callable[..., BuiltPipeline]):
+        PIPELINES[name] = factory
+        return factory
+    return deco
+
+
+def build_pipeline(name: str, scale: float = 1.0, key: Optional[jax.Array] = None,
+                   pad: bool = True, **det_kw) -> BuiltPipeline:
+    if name not in PIPELINES:
+        raise KeyError(
+            f"unknown pipeline {name!r}; registered: {sorted(PIPELINES)}"
+        )
+    if key is None:
+        key = _default_key()
+    return PIPELINES[name](scale=scale, key=key, pad=pad, **det_kw)
+
+
+def _effective_scales(scale: float, pad: bool) -> tuple[float, float]:
+    """The per-axis scale factors preprocess actually applies to the
+    canonical (H, W) scene: integer rounding (and the unpadded 8-px grid
+    snap) makes them differ from the nominal λ, and from each other."""
+    if scale == 1.0:
+        return 1.0, 1.0
+    nh, nw = max(int(H * scale), 8), max(int(W * scale), 8)
+    if not pad:
+        nh, nw = max(nh // 8 * 8, 8), max(nw // 8 * 8, 8)
+    return nh / H, nw / W
+
+
+def _unscale(boxes: np.ndarray, scale: float, pad: bool) -> np.ndarray:
+    """Detections on a λ-scaled input live in the shrunk frame; map them
+    back (per axis, using the effective scales) so quality is comparable
+    across rungs."""
+    sy, sx = _effective_scales(scale, pad)
+    if sy == sx == 1.0 or not len(boxes):
+        return boxes
+    return boxes / np.array([sy, sx, sy, sx], boxes.dtype)
+
+
+@register_pipeline("one_stage")
+def _make_one_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) -> BuiltPipeline:
+    det = OneStageDetector(**det_kw)
+    params = det.init(key if key is not None else _default_key())
+    infer = jax.jit(lambda img: det.infer(params, img))
+
+    def post(dev) -> FrameOutput:
+        boxes, _, keep = dev
+        # static shapes: host only reads back a FIXED-size buffer
+        k = np.asarray(keep)
+        b = _unscale(np.asarray(boxes)[k], scale, pad)
+        return FrameOutput(boxes=b, num_objects=float(k.sum()),
+                           num_proposals=float(det.top_k))
+
+    return BuiltPipeline("one_stage", scale, infer, post, pad=pad)
+
+
+@register_pipeline("early_exit")
+def _make_early_exit(scale: float = 1.0, key=None, pad: bool = True, **det_kw) -> BuiltPipeline:
+    """Truncated-backbone one-stage variant: 1 conv + coarse 16-px grid —
+    the anytime ladder's cheapest detection rung."""
+    det_kw.setdefault("depth", 1)
+    det_kw.setdefault("cell", 16)
+    built = _make_one_stage(scale=scale, key=key, pad=pad, **det_kw)
+    return dataclasses.replace(built, name="early_exit")
+
+
+@register_pipeline("two_stage")
+def _make_two_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) -> BuiltPipeline:
+    det = TwoStageDetector(**det_kw)
+    params = det.init(key if key is not None else _default_key())
+    infer = jax.jit(lambda img: det.infer_device(params, img))
+
+    def post(dev) -> FrameOutput:
+        feat, obj = dev
+        boxes, n_prop = det.post_host(params, np.asarray(feat), np.asarray(obj))
+        return FrameOutput(boxes=_unscale(np.asarray(boxes), scale, pad),
+                           num_objects=float(len(boxes)),
+                           num_proposals=float(n_prop))
+
+    return BuiltPipeline("two_stage", scale, infer, post, pad=pad)
+
+
+_NO_BOXES = np.zeros((0, 4), np.float32)
+
+
+@register_pipeline("lane")
+def _make_lane(scale: float = 1.0, key=None, pad: bool = True, **det_kw) -> BuiltPipeline:
+    det = LaneDetector(**det_kw)
+    params = det.init(key if key is not None else _default_key())
+    infer = jax.jit(lambda img: det.infer_device(params, img))
+
+    def post(dev) -> FrameOutput:
+        fits, n_pix = det.cluster_host(np.asarray(dev))
+        return FrameOutput(boxes=_NO_BOXES, num_objects=float(len(fits)),
+                           num_proposals=float(n_pix))
+
+    return BuiltPipeline("lane", scale, infer, post, pad=pad)
+
+
+@register_pipeline("lane_static")
+def _make_lane_static(scale: float = 1.0, key=None, pad: bool = True, **det_kw) -> BuiltPipeline:
+    """The mitigation: identical lane pipeline with static-shape top-k
+    fitting on device — post-processing variance collapses."""
+    det = LaneDetector(**det_kw)
+    params = det.init(key if key is not None else _default_key())
+
+    def full(img):
+        prob = det.infer_device(params, img)
+        return det.static_fit_device(prob)
+
+    infer = jax.jit(full)
+
+    def post(dev) -> FrameOutput:
+        fits, n_pix = dev
+        f = np.asarray(fits)            # fixed-size readback only
+        return FrameOutput(boxes=_NO_BOXES, num_objects=float(f.shape[0]),
+                           num_proposals=float(np.asarray(n_pix)))
+
+    return BuiltPipeline("lane_static", scale, infer, post, pad=pad)
+
+
+def run_frame(built: BuiltPipeline, scene: Scene):
+    """One stage-timed frame through a built pipeline — the Fig. 3 loop
+    body every harness (legacy runners, calibration, the anytime loop)
+    shares.  Returns ``(StageRecord, FrameOutput)``."""
+    timer = StageTimer()
+    with timer.stage("read"):
+        raw = scene.image.copy()
+    with timer.stage("pre_processing"):
+        img = preprocess(raw, built.scale, built.pad)
+    with timer.stage("inference"):
+        dev = built.infer(jnp.asarray(img))
+        jax.block_until_ready(dev)
+    with timer.stage("post_processing"):
+        out = built.post(dev)
+    timer.note("num_objects", out.num_objects)
+    timer.note("num_proposals", out.num_proposals)
+    return timer.finish(), out
 
 
 def _scenes(cfg: SceneConfig, n: int, images: Optional[Iterable[np.ndarray]] = None):
@@ -64,113 +260,65 @@ def _scenes(cfg: SceneConfig, n: int, images: Optional[Iterable[np.ndarray]] = N
             yield generate_scene(cfg, i)
 
 
+def run_pipeline(
+    name: str,
+    cfg: SceneConfig,
+    n: int = 40,
+    scale: float = 1.0,
+    images: Optional[Iterable[np.ndarray]] = None,
+    key: Optional[jax.Array] = None,
+    collect: bool = False,
+    built: Optional[BuiltPipeline] = None,
+    pad: bool = True,
+):
+    """Drive any registered pipeline through the stage-timed frame loop.
+
+    Frame 0 is a warmup (XLA compilation) and is never recorded.  With
+    ``collect=True`` returns ``(recorder, [(scene, FrameOutput), ...])``
+    so callers can score detections against ground truth; otherwise just
+    the recorder (the legacy contract).  ``built`` reuses an already-jitted
+    pipeline (the anytime runner keeps one per rung).
+    """
+    if built is None:
+        built = build_pipeline(name, scale=scale, key=key, pad=pad)
+    rec = TimelineRecorder()
+    outputs: list[tuple[Scene, FrameOutput]] = []
+    for i, scene in enumerate(_scenes(cfg, n + 1, images)):
+        record, out = run_frame(built, scene)
+        if i > 0:
+            rec.add(record)
+            if collect:
+                outputs.append((scene, out))
+    return (rec, outputs) if collect else rec
+
+
+# ---------------------------------------------------------------------------
+# legacy entry points — thin wrappers over the registry runner
+# ---------------------------------------------------------------------------
+
 def run_one_stage(
     cfg: SceneConfig, n: int = 40, scale: float = 1.0,
     images: Optional[Iterable[np.ndarray]] = None,
 ) -> TimelineRecorder:
-    det = OneStageDetector()
-    params = det.init(KEY)
-    infer = jax.jit(det.infer)
-    rec = TimelineRecorder()
-    for i, scene in enumerate(_scenes(cfg, n + 1, images)):
-        timer = StageTimer()
-        with timer.stage("read"):
-            raw = scene.image.copy()
-        with timer.stage("pre_processing"):
-            img = preprocess(raw, scale)
-        with timer.stage("inference"):
-            boxes, scores, keep = infer(params, jnp.asarray(img))
-            jax.block_until_ready(keep)
-        with timer.stage("post_processing"):
-            # static shapes: host only reads back a FIXED-size buffer
-            nb = int(np.asarray(keep).sum())
-        timer.note("num_objects", nb)
-        timer.note("num_proposals", float(det.top_k))
-        if i > 0:
-            rec.add(timer.finish())
-    return rec
+    return run_pipeline("one_stage", cfg, n=n, scale=scale, images=images)
 
 
 def run_two_stage(
     cfg: SceneConfig, n: int = 40, scale: float = 1.0,
     images: Optional[Iterable[np.ndarray]] = None,
 ) -> TimelineRecorder:
-    det = TwoStageDetector()
-    params = det.init(KEY)
-    infer = jax.jit(det.infer_device)
-    rec = TimelineRecorder()
-    for i, scene in enumerate(_scenes(cfg, n + 1, images)):
-        timer = StageTimer()
-        with timer.stage("read"):
-            raw = scene.image.copy()
-        with timer.stage("pre_processing"):
-            img = preprocess(raw, scale)
-        with timer.stage("inference"):
-            feat, obj = infer(params, jnp.asarray(img))
-            jax.block_until_ready(obj)
-        with timer.stage("post_processing"):
-            boxes, n_prop = det.post_host(params, np.asarray(feat), np.asarray(obj))
-        timer.note("num_objects", len(boxes))
-        timer.note("num_proposals", n_prop)
-        if i > 0:
-            rec.add(timer.finish())
-    return rec
+    return run_pipeline("two_stage", cfg, n=n, scale=scale, images=images)
 
 
 def run_lane(
     cfg: SceneConfig, n: int = 40,
     images: Optional[Iterable[np.ndarray]] = None,
 ) -> TimelineRecorder:
-    det = LaneDetector()
-    params = det.init(KEY)
-    infer = jax.jit(det.infer_device)
-    rec = TimelineRecorder()
-    for i, scene in enumerate(_scenes(cfg, n + 1, images)):
-        timer = StageTimer()
-        with timer.stage("read"):
-            raw = scene.image.copy()
-        with timer.stage("pre_processing"):
-            img = preprocess(raw)
-        with timer.stage("inference"):
-            prob = infer(params, jnp.asarray(img))
-            jax.block_until_ready(prob)
-        with timer.stage("post_processing"):
-            fits, n_pix = det.cluster_host(np.asarray(prob))
-        timer.note("num_objects", len(fits))
-        timer.note("num_proposals", n_pix)
-        if i > 0:
-            rec.add(timer.finish())
-    return rec
+    return run_pipeline("lane", cfg, n=n, images=images)
 
 
 def run_lane_static(
     cfg: SceneConfig, n: int = 40,
     images: Optional[Iterable[np.ndarray]] = None,
 ) -> TimelineRecorder:
-    """The mitigation: identical lane pipeline with static-shape top-k
-    fitting on device — post-processing variance collapses."""
-    det = LaneDetector()
-    params = det.init(KEY)
-
-    def full(params, img):
-        prob = det.infer_device(params, img)
-        return det.static_fit_device(prob)
-
-    infer = jax.jit(full)
-    rec = TimelineRecorder()
-    for i, scene in enumerate(_scenes(cfg, n + 1, images)):
-        timer = StageTimer()
-        with timer.stage("read"):
-            raw = scene.image.copy()
-        with timer.stage("pre_processing"):
-            img = preprocess(raw)
-        with timer.stage("inference"):
-            fits, n_pix = infer(params, jnp.asarray(img))
-            jax.block_until_ready(fits)
-        with timer.stage("post_processing"):
-            _ = np.asarray(fits)            # fixed-size readback only
-        timer.note("num_proposals", float(np.asarray(n_pix)))
-        timer.note("num_objects", fits.shape[0])
-        if i > 0:
-            rec.add(timer.finish())
-    return rec
+    return run_pipeline("lane_static", cfg, n=n, images=images)

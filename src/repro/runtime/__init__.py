@@ -10,7 +10,7 @@
                      join/leave padded slots without recompilation, with
                      per-tenant deadline policies and variance attribution.
 """
-from .admission import AdmissionController, AdmissionDecision, AlwaysAdmit
+from .admission import AdmissionController, AdmissionDecision, AlwaysAdmit, AnytimeAdmission
 from .engine import Engine, ServeConfig, make_prefill_step, make_serve_step
 from .multi_tenant import MultiTenantConfig, MultiTenantEngine, TenantState
 from .queue import RequestQueue, StreamRequest, poisson_workload
@@ -23,6 +23,7 @@ __all__ = [
     "AdmissionController",
     "AdmissionDecision",
     "AlwaysAdmit",
+    "AnytimeAdmission",
     "MultiTenantConfig",
     "MultiTenantEngine",
     "TenantState",

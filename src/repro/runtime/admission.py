@@ -24,7 +24,7 @@ from repro.core.predictor import FeaturePredictor, Prediction
 
 from .queue import StreamRequest
 
-__all__ = ["AdmissionDecision", "AdmissionController", "AlwaysAdmit"]
+__all__ = ["AdmissionDecision", "AdmissionController", "AnytimeAdmission", "AlwaysAdmit"]
 
 ADMIT = "admit"
 DEFER = "defer"
@@ -36,6 +36,10 @@ class AdmissionDecision:
     action: str                  # admit | defer | shed
     predicted: Optional[Prediction]
     reason: str
+    # set when the admitted stream differs from the one asked about (the
+    # anytime path admits a degraded-SLO replacement); the engine must
+    # seat THIS request, not the original
+    request: Optional[StreamRequest] = None
 
 
 class AdmissionController:
@@ -89,38 +93,46 @@ class AdmissionController:
 
     # ---------------- decision ----------------
     def decide(
-        self, req: StreamRequest, n_active: int, now: float
+        self, req: StreamRequest, n_active: int, now: float, record: bool = True
     ) -> AdmissionDecision:
+        """Decide admit/defer/shed.  ``record=False`` makes the call a pure
+        probe: no counters or inflight bookkeeping are touched (the anytime
+        wrapper probes degraded service levels without polluting stats)."""
         if req.deadline_s is None:
-            self.admitted += 1
+            if record:
+                self.admitted += 1
             return AdmissionDecision(ADMIT, None, "best-effort")
         if self._n_obs < self.min_observations:
             # cold start: no basis for prediction — admit and learn
-            self.admitted += 1
+            if record:
+                self.admitted += 1
             return AdmissionDecision(ADMIT, None, "cold-start")
 
         waited = now - req.arrival_s
         pred_joined = self.predict(n_active + 1)
         tail_joined = self._tail(n_active + 1)
         if tail_joined <= req.deadline_s:
-            self.admitted += 1
-            self._deferred_inflight.discard(id(req))
+            if record:
+                self.admitted += 1
+                self._deferred_inflight.discard(id(req))
             return AdmissionDecision(
                 ADMIT, pred_joined,
                 f"p{self.confidence*100:.0f} step {tail_joined*1e3:.2f}ms "
                 f"<= SLO {req.deadline_s*1e3:.2f}ms at occupancy {n_active + 1}",
             )
         if waited > self.max_wait_s:
-            self.shed += 1
-            self._deferred_inflight.discard(id(req))
+            if record:
+                self.shed += 1
+                self._deferred_inflight.discard(id(req))
             return AdmissionDecision(
                 SHED, pred_joined,
                 f"waited {waited:.3f}s > max_wait {self.max_wait_s:.3f}s",
             )
         tail_solo = self._tail(1)
         if tail_solo > req.deadline_s:
-            self.shed += 1
-            self._deferred_inflight.discard(id(req))
+            if record:
+                self.shed += 1
+                self._deferred_inflight.discard(id(req))
             return AdmissionDecision(
                 SHED, pred_joined,
                 f"SLO {req.deadline_s*1e3:.2f}ms unachievable: solo "
@@ -128,7 +140,7 @@ class AdmissionController:
             )
         # a head-of-line request is re-decided every drain iteration while
         # it waits: count it once, like admitted/shed per-request counters
-        if id(req) not in self._deferred_inflight:
+        if record and id(req) not in self._deferred_inflight:
             self._deferred_inflight.add(id(req))
             self.deferred += 1
         return AdmissionDecision(
@@ -136,6 +148,99 @@ class AdmissionController:
             f"p{self.confidence*100:.0f} step {tail_joined*1e3:.2f}ms "
             f"> SLO {req.deadline_s*1e3:.2f}ms at occupancy {n_active + 1}",
         )
+
+
+class AnytimeAdmission:
+    """Degrade-before-shed decorator over an ``AdmissionController``.
+
+    The anytime subsystem's philosophy applied at the admission boundary:
+    when the inner controller would shed an SLO-bearing stream, try the
+    stream's declared service ladder (``StreamRequest.degrade_factors``,
+    SLO relaxation factors in preference order) and admit the first level
+    the inner controller accepts.  Degraded service beats no service; the
+    relaxed SLO sticks to the seated tenant so misses are scored against
+    the contract actually granted.
+    """
+
+    def __init__(self, inner: AdmissionController) -> None:
+        self.inner = inner
+        self.degraded = 0              # streams rescued from a shed
+        self.degrade_log: list[tuple[str, float]] = []   # (tenant, factor)
+        # requests counted as deferred via a degraded probe (by identity;
+        # a deferred request stays alive in the queue so its id is stable)
+        self._rescued_defer: set[int] = set()
+
+    # latency model passthrough -------------------------------------------
+    def observe_step(self, n_active: int, latency: float) -> None:
+        self.inner.observe_step(n_active, latency)
+
+    def predict(self, n_active: int) -> Prediction:
+        return self.inner.predict(n_active)
+
+    @property
+    def admitted(self) -> int:
+        return self.inner.admitted
+
+    @property
+    def deferred(self) -> int:
+        return self.inner.deferred
+
+    @property
+    def shed(self) -> int:
+        return self.inner.shed
+
+    # decision -------------------------------------------------------------
+    def decide(
+        self, req: StreamRequest, n_active: int, now: float
+    ) -> AdmissionDecision:
+        rid = id(req)
+        if rid in self._rescued_defer:
+            # already counted as deferred through a degraded probe; seed the
+            # inner inflight set so a genuine defer doesn't double-count
+            self.inner._deferred_inflight.add(rid)
+        decision = self.inner.decide(req, n_active, now)
+        if (
+            decision.action != SHED
+            or req.deadline_s is None
+            or not req.degrade_factors
+        ):
+            if decision.action in (ADMIT, SHED):
+                self._rescued_defer.discard(rid)
+            return decision
+        for factor in req.degrade_factors:
+            relaxed = dataclasses.replace(
+                req, deadline_s=req.deadline_s * factor, degrade_factors=()
+            )
+            # pure probe: no counter side effects to undo
+            retry = self.inner.decide(relaxed, n_active, now, record=False)
+            if retry.action == ADMIT:
+                # the stream was rescued, not shed — it is one admit
+                self.inner.shed -= 1
+                self.inner.admitted += 1
+                self.degraded += 1
+                self.degrade_log.append((req.tenant, factor))
+                self._rescued_defer.discard(rid)
+                return AdmissionDecision(
+                    ADMIT, retry.predicted,
+                    f"degraded SLO ×{factor:g} "
+                    f"({req.deadline_s * 1e3:.2f}→{relaxed.deadline_s * 1e3:.2f}ms): "
+                    f"{retry.reason}",
+                    request=relaxed,
+                )
+            if retry.action == DEFER:
+                # admissible at a degraded SLO once slots drain: wait rather
+                # than shed; count the defer once per request across the
+                # head-of-line retries
+                self.inner.shed -= 1
+                if rid not in self._rescued_defer:
+                    self._rescued_defer.add(rid)
+                    self.inner.deferred += 1
+                return AdmissionDecision(
+                    DEFER, retry.predicted,
+                    f"deferred at degraded SLO ×{factor:g}: {retry.reason}",
+                )
+        self._rescued_defer.discard(rid)
+        return decision
 
 
 class AlwaysAdmit:

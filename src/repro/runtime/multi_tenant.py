@@ -47,7 +47,14 @@ from repro.core.timing import StageTimer, TimelineRecorder
 from repro.models import DecodeState, Model
 from repro.models.attention import KVCache
 
-from .admission import ADMIT, DEFER, SHED, AdmissionController, AlwaysAdmit
+from .admission import (
+    ADMIT,
+    DEFER,
+    SHED,
+    AdmissionController,
+    AlwaysAdmit,
+    AnytimeAdmission,
+)
 from .engine import make_serve_step
 from .queue import RequestQueue, StreamRequest
 
@@ -138,11 +145,24 @@ class MultiTenantEngine:
         cfg: MultiTenantConfig,
         admission: Optional[AdmissionController | AlwaysAdmit] = None,
         policy_factory: Callable[[StreamRequest], DeadlinePolicy] = _default_policy,
+        anytime: bool = False,
     ) -> None:
         self.model = model
         self.params = params
         self.cfg = cfg
         self.admission = admission if admission is not None else AlwaysAdmit()
+        if anytime:
+            # anytime mode: degradation (SLO relaxation down the request's
+            # declared service ladder) is attempted before admission-shedding
+            if isinstance(self.admission, AdmissionController):
+                self.admission = AnytimeAdmission(self.admission)
+            elif not isinstance(self.admission, AnytimeAdmission):
+                raise ValueError(
+                    "anytime=True needs a shedding admission controller to "
+                    f"degrade around (got {type(self.admission).__name__}); "
+                    "an always-admit engine never sheds, so there is "
+                    "nothing to rescue"
+                )
         self.policy_factory = policy_factory
 
         self.trace_count = 0
@@ -237,7 +257,9 @@ class MultiTenantEngine:
             req = queue.pop()
             decision = self.admission.decide(req, self.n_active, now)
             if decision.action == ADMIT:
-                self.join(req, now)
+                # the anytime path may admit a degraded-SLO replacement;
+                # seat the request the decision actually granted
+                self.join(decision.request if decision.request is not None else req, now)
                 seated += 1
             elif decision.action == DEFER:
                 queue.requeue(req)
@@ -383,6 +405,7 @@ class MultiTenantEngine:
             "steps": self.steps,
             "streams": len(tenants),
             "shed_streams": len(self.shed),
+            "degraded_streams": getattr(self.admission, "degraded", 0),
             "jobs": jobs,
             "misses": misses,
             "miss_rate": misses / jobs if jobs else float("nan"),

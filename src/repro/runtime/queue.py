@@ -33,6 +33,9 @@ class StreamRequest:
     deadline_s: Optional[float] = None
     arrival_s: float = 0.0
     criticality: float = 1.0           # <1 tightens DynamicDeadline tenants
+    # anytime service ladder: SLO relaxation factors tried (in order) before
+    # the request is shed — degraded service beats no service
+    degrade_factors: tuple[float, ...] = ()
 
     def __post_init__(self) -> None:
         p = np.asarray(self.prompt, np.int32)
@@ -45,6 +48,11 @@ class StreamRequest:
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"stream {self.tenant!r}: max_new_tokens must be >= 1"
+            )
+        if any(f < 1.0 for f in self.degrade_factors):
+            raise ValueError(
+                f"stream {self.tenant!r}: degrade_factors must relax the "
+                f"SLO (>= 1), got {self.degrade_factors}"
             )
 
 
@@ -89,6 +97,7 @@ def poisson_workload(
     max_new_tokens: int = 32,
     deadline_s: Optional[float] = None,
     seed: int = 0,
+    degrade_factors: tuple[float, ...] = (),
 ) -> list[StreamRequest]:
     """``n_streams`` requests with exponential inter-arrival times (a
     Poisson arrival process at ``rate_hz``), random prompts, one tenant id
@@ -105,6 +114,7 @@ def poisson_workload(
                 max_new_tokens=max_new_tokens,
                 deadline_s=deadline_s,
                 arrival_s=float(arrivals[i]),
+                degrade_factors=degrade_factors,
             )
         )
     return reqs

@@ -48,6 +48,24 @@ class TaskSpec:
     priority: int = 0                # FIFO/RR: higher runs first
     deadline_budget: float = 0.0     # DEADLINE: CBS runtime budget per period
     n_jobs: int = 200
+    # anytime fidelity: alternative per-rung stage chains (e.g. from a
+    # calibrated ladder's stage means) and a per-job rung choice — so
+    # scheduling-policy × fidelity interactions are simulable.  Without
+    # ``rungs`` every job runs ``stages``.
+    rungs: Optional[tuple[tuple[StageSpec, ...], ...]] = None
+    rung_fn: Optional[Callable[[int], int]] = None
+
+    def job_stages(self, job_idx: int) -> tuple[int, tuple[StageSpec, ...]]:
+        """(rung index, stage chain) for job ``job_idx``."""
+        if self.rungs is None:
+            return 0, self.stages
+        r = self.rung_fn(job_idx) if self.rung_fn is not None else 0
+        if not 0 <= r < len(self.rungs):
+            raise ValueError(
+                f"task {self.name!r}: rung_fn({job_idx}) = {r} is outside "
+                f"the {len(self.rungs)}-rung ladder"
+            )
+        return r, self.rungs[r]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +80,7 @@ class SimResult:
     latencies: dict[str, np.ndarray]     # task → end-to-end per job
     throttle_events: dict[str, int]
     miss_rates: dict[str, float]         # fraction of jobs finishing > period
+    rungs: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -70,6 +89,8 @@ class _Job:
     idx: int
     release: float
     durations: tuple[float, ...]
+    stages: tuple[StageSpec, ...] = ()
+    rung: int = 0
     stage: int = 0
     remaining: float = 0.0
     vruntime: float = 0.0
@@ -80,7 +101,7 @@ class _Job:
     done_at: float = -1.0
 
     def resource(self) -> str:
-        return self.task.stages[self.stage].resource
+        return self.stages[self.stage].resource
 
 
 def _draw(rng: np.random.Generator, spec: StageSpec, job: int) -> float:
@@ -95,8 +116,10 @@ def simulate(tasks: list[TaskSpec], cfg: SimConfig = SimConfig()) -> SimResult:
     jobs: list[_Job] = []
     for t in tasks:
         for j in range(t.n_jobs):
-            durs = tuple(_draw(rng, s, j) for s in t.stages)
-            jb = _Job(task=t, idx=j, release=j * t.period, durations=durs)
+            rung, stages = t.job_stages(j)
+            durs = tuple(_draw(rng, s, j) for s in stages)
+            jb = _Job(task=t, idx=j, release=j * t.period, durations=durs,
+                      stages=stages, rung=rung)
             jb.remaining = durs[0]
             jb.budget = t.deadline_budget
             jb.period_end = jb.release + t.period
@@ -118,7 +141,7 @@ def simulate(tasks: list[TaskSpec], cfg: SimConfig = SimConfig()) -> SimResult:
         jb.stage += 1
         jb.queued_accel = False
         jb.throttled_until = 0.0
-        if jb.stage >= len(jb.task.stages):
+        if jb.stage >= len(jb.stages):
             jb.done_at = now
             live.remove(jb)
             finished += 1
@@ -187,8 +210,12 @@ def simulate(tasks: list[TaskSpec], cfg: SimConfig = SimConfig()) -> SimResult:
 
     lat = {}
     miss = {}
+    rungs = {}
     for t in tasks:
-        xs = np.array([jb.done_at - jb.release for jb in jobs if jb.task is t])
+        mine = [jb for jb in jobs if jb.task is t]
+        xs = np.array([jb.done_at - jb.release for jb in mine])
         lat[t.name] = xs
         miss[t.name] = float(np.mean(xs > t.period)) if xs.size else float("nan")
-    return SimResult(latencies=lat, throttle_events=throttles, miss_rates=miss)
+        rungs[t.name] = np.array([jb.rung for jb in mine], np.int64)
+    return SimResult(latencies=lat, throttle_events=throttles, miss_rates=miss,
+                     rungs=rungs)

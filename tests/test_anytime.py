@@ -1,0 +1,455 @@
+"""Anytime perception subsystem: ladder calibration, cost-model quantiles,
+contract-controller degrade/recover hysteresis, the registry-driven
+pipeline runner, degrade-before-shed admission, and per-rung simulator
+chains.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.anytime import (
+    ContractController,
+    ControllerConfig,
+    FixedController,
+    Ladder,
+    LadderCostModel,
+    Rung,
+    SceneFeatures,
+    build_rungs,
+    calibrate,
+    default_rungs,
+    run_anytime,
+    rung_stage_specs,
+)
+from repro.core.timing import StageRecord
+from repro.perception import PIPELINES, SceneConfig, build_pipeline, run_pipeline
+
+
+# ---------------------------------------------------------------- helpers --
+
+def toy_rung(name, e2e_s, quality):
+    """A rung whose calibrated stage means sum to ``e2e_s``."""
+    return Rung(name, "one_stage", 1.0, quality=quality, stage_means={
+        "read": 0.02 * e2e_s,
+        "pre_processing": 0.18 * e2e_s,
+        "inference": 0.50 * e2e_s,
+        "post_processing": 0.30 * e2e_s,
+    })
+
+
+def toy_ladder():
+    return Ladder([
+        toy_rung("hi", 8e-3, 0.70),
+        toy_rung("mid", 4e-3, 0.55),
+        toy_rung("lo", 1.5e-3, 0.30),
+    ])
+
+
+def record_for(rung, scale=1.0, proposals=40.0):
+    return StageRecord(
+        stages={k: v * scale for k, v in rung.stage_means.items()},
+        meta={"num_proposals": proposals},
+    )
+
+
+# ------------------------------------------------------------- registry ----
+
+def test_pipeline_registry_names_and_runner():
+    assert {"one_stage", "two_stage", "lane", "lane_static", "early_exit"} <= set(PIPELINES)
+    with pytest.raises(KeyError, match="unknown pipeline"):
+        build_pipeline("nope")
+    rec, outs = run_pipeline("one_stage", SceneConfig("city", seed=4), n=3, collect=True)
+    assert len(rec.records) == 3 and len(outs) == 3
+    assert set(rec.stages()) == {"read", "pre_processing", "inference", "post_processing"}
+    scene, out = outs[0]
+    assert out.boxes.ndim == 2 and out.boxes.shape[1] == 4
+
+
+def test_pipelines_import_does_no_jax_work():
+    """Satellite: no module-level PRNGKey — importing must stay cheap."""
+    import repro.perception.pipelines as mod
+    assert "KEY" not in vars(mod)
+
+
+def test_unpadded_odd_scale_builds_and_runs():
+    """λ values off the 8-px grid must round to a valid static shape, not
+    blow up inside jit (crop-to-tile-grid pooling)."""
+    from repro.perception.data import generate_scene
+    from repro.perception.pipelines import run_frame
+
+    cfg = SceneConfig("city", seed=4)
+    scene = generate_scene(cfg, 1)
+    for name, scale in [("one_stage", 0.9), ("early_exit", 0.7), ("two_stage", 0.9)]:
+        built = build_pipeline(name, scale=scale, pad=False)
+        record, out = run_frame(built, scene)
+        assert record.end_to_end > 0
+        assert out.boxes.shape[1] == 4
+
+
+def test_legacy_wrappers_match_runner_contract():
+    from repro.perception import run_lane_static
+    rec = run_lane_static(SceneConfig("city", seed=4), n=2)
+    assert len(rec.records) == 2
+    assert rec.meta_series("num_objects").shape == (2,)
+
+
+# ---------------------------------------------------------------- ladder ----
+
+def test_ladder_validation():
+    with pytest.raises(ValueError, match="at least one rung"):
+        Ladder([])
+    with pytest.raises(ValueError, match="duplicate"):
+        Ladder([toy_rung("a", 1e-3, 0.5), toy_rung("a", 2e-3, 0.4)])
+    lad = toy_ladder()
+    assert lad.top.name == "hi" and lad.floor.name == "lo"
+    assert lad.index("mid") == 1
+    with pytest.raises(KeyError):
+        lad.index("nope")
+
+
+def test_calibrate_measures_and_orders_quality():
+    rungs = [
+        Rung("two_stage", "two_stage", 1.0),
+        Rung("one_stage", "one_stage", 1.0),
+        Rung("early_exit@0.5", "early_exit", 0.5),
+    ]
+    lad = calibrate(rungs, SceneConfig("city", seed=7), n=6)
+    qs = [r.quality for r in lad]
+    assert qs == sorted(qs, reverse=True)
+    assert lad.top.quality > lad.floor.quality + 0.1
+    for r in lad:
+        assert math.isfinite(r.e2e_mean) and r.e2e_mean > 0
+        assert "inference" in r.stage_means
+    # the paper-quality ordering on these scenes: full two-stage beats the
+    # coarse truncated-backbone exit by a wide margin
+    assert lad.top.name == "two_stage"
+    assert lad.floor.name == "early_exit@0.5"
+
+
+def test_rung_stage_specs_maps_to_simulator_resources():
+    specs = rung_stage_specs(toy_rung("r", 8e-3, 0.5))
+    assert [s.resource for s in specs] == ["cpu", "accel", "cpu"]
+    assert specs[1].mean == pytest.approx(4e-3)
+    with pytest.raises(ValueError, match="uncalibrated"):
+        rung_stage_specs(Rung("raw", "one_stage"))
+
+
+# ------------------------------------------------------------ cost model ----
+
+def test_cost_model_rejects_uncalibrated_ladder():
+    """A zero prior would make every budget 'fit'; the cost model must
+    fail loudly instead."""
+    with pytest.raises(ValueError, match="uncalibrated"):
+        LadderCostModel(Ladder([Rung("raw", "one_stage")]))
+    with pytest.raises(ValueError, match="uncalibrated"):
+        ContractController(Ladder([Rung("raw", "one_stage")]))
+
+
+def test_cost_model_cold_start_uses_calibrated_prior():
+    lad = toy_ladder()
+    cm = LadderCostModel(lad)
+    p = cm.predict("hi", SceneFeatures())
+    assert p.mean == pytest.approx(8e-3, rel=1e-6)
+    assert p.std > 0
+    assert p.quantile(0.99) > p.mean > p.quantile(0.01)
+
+
+def test_cost_model_learns_proposal_driven_post_time():
+    lad = toy_ladder()
+    cm = LadderCostModel(lad)
+    rung = lad.top
+    # post time proportional to the (previous-frame) proposal count
+    for i in range(30):
+        props = 20.0 + (i % 10) * 8.0
+        rec = StageRecord(
+            stages={"read": 1e-4, "pre_processing": 1e-3, "inference": 4e-3,
+                    "post_processing": 5e-5 * props},
+            meta={"num_proposals": props},
+        )
+        cm.observe(rung.name, rec, SceneFeatures(proposals_prev=props))
+    sparse = cm.predict(rung.name, SceneFeatures(proposals_prev=20.0))
+    dense = cm.predict(rung.name, SceneFeatures(proposals_prev=90.0))
+    assert dense.mean > sparse.mean + 2e-3
+
+
+def test_scene_features_composite_prior():
+    # no history: scenario density prior, attenuated by rain (Table IV)
+    dry = SceneFeatures(scenario="city").composite()
+    wet = SceneFeatures(scenario="city", rain_mm_per_hour=200.0).composite()
+    road = SceneFeatures(scenario="road").composite()
+    assert wet < dry and road < dry
+    # history dominates when present
+    assert SceneFeatures(proposals_prev=77.0).composite() == 77.0
+
+
+# ------------------------------------------------------------ controller ----
+
+def test_controller_picks_highest_rung_that_fits():
+    lad = toy_ladder()
+    ctl = ContractController(lad)
+    tails = {r.name: ctl.cost.predict(r.name, SceneFeatures()).quantile(0.95)
+             for r in lad}
+    assert ctl.select(10 * tails["hi"]).rung.name == "hi"
+    ctl2 = ContractController(lad)
+    assert ctl2.select(0.5 * (tails["mid"] + tails["hi"])).rung.name == "mid"
+    ctl3 = ContractController(lad)
+    assert ctl3.select(0.5 * (tails["lo"] + tails["mid"])).rung.name == "lo"
+
+
+def test_controller_floor_when_nothing_fits():
+    lad = toy_ladder()
+    ctl = ContractController(lad)
+    sel = ctl.select(1e-9)
+    assert sel.rung.name == "lo" and not sel.fits
+
+
+def test_controller_degrades_under_contention_and_recovers():
+    """The acceptance path: contention (residual budget collapse) degrades
+    immediately; the controller climbs back to the top rung when headroom
+    returns, after the hysteresis hold."""
+    lad = toy_ladder()
+    cfg = ControllerConfig(hold_frames=3)
+    ctl = ContractController(lad, cfg=cfg)
+    loose, tight = 40e-3, 1.8e-3
+    trace = []
+    for i in range(24):
+        budget = tight if 8 <= i < 16 else loose
+        sel = ctl.select(budget, SceneFeatures())
+        trace.append(sel.rung.name)
+        ctl.observe(sel.rung.name, record_for(sel.rung), SceneFeatures())
+    assert trace[:8] == ["hi"] * 8
+    assert set(trace[8:16]) == {"lo"}          # degraded through the window
+    assert trace[-1] == "hi"                   # recovered to the top rung
+    # exactly one down-switch and one up-switch (possibly via mid): no thrash
+    assert ctl.switches <= 3
+
+
+def test_controller_hysteresis_prevents_thrashing():
+    """A budget oscillating around the top rung's tail must not bounce
+    fidelity every frame."""
+    lad = toy_ladder()
+    ctl = ContractController(lad, cfg=ControllerConfig(hold_frames=3,
+                                                       upgrade_headroom=1.25))
+    tail_hi = ctl.cost.predict("hi", SceneFeatures()).quantile(0.95)
+    for i in range(30):
+        budget = tail_hi * (1.03 if i % 2 == 0 else 0.97)
+        sel = ctl.select(budget, SceneFeatures())
+        ctl.observe(sel.rung.name, record_for(sel.rung), SceneFeatures())
+    # without hysteresis this would be ~30 switches
+    assert ctl.switches <= 2
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError, match="quantile"):
+        ControllerConfig(quantile=1.0)
+    with pytest.raises(ValueError, match="upgrade_headroom"):
+        ControllerConfig(upgrade_headroom=0.9)
+    with pytest.raises(ValueError, match="hold_frames"):
+        ControllerConfig(hold_frames=-1)
+
+
+# -------------------------------------------------------- anytime runner ----
+
+@pytest.fixture(scope="module")
+def small_ladder():
+    rungs = [Rung("one_stage", "one_stage", 1.0),
+             Rung("early_exit@0.5", "early_exit", 0.5)]
+    cfg = SceneConfig("city", seed=9)
+    built = build_rungs(rungs, cfg)              # one compilation, shared
+    return calibrate(rungs, cfg, n=4, built=built), cfg, built
+
+
+def test_run_anytime_degrade_recover_real_pipelines(small_ladder):
+    """End-to-end on real jitted pipelines: a budget collapse mid-run
+    forces the floor rung, recovery returns the top rung — machine-speed
+    independent because the budgets are extreme."""
+    ladder, cfg, built = small_ladder
+
+    def budget_fn(i):
+        return 1e-4 if 4 <= i < 9 else 1.0     # 0.1ms dip inside a 1s budget
+
+    rep = run_anytime(ladder, cfg, 1.0, n=13, built=built, budget_fn=budget_fn)
+    trace = rep.rung_trace()
+    assert len(trace) == 13
+    assert trace[0] == ladder.top.name
+    assert set(trace[4:9]) == {ladder.floor.name}
+    assert trace[-1] == ladder.top.name
+    assert rep.switches == 2
+    floor_frames = [f for f in rep.frames if f.rung == ladder.floor.name]
+    assert all(not f.fits for f in floor_frames)   # honest about the breach
+    assert math.isfinite(rep.mean_quality)
+
+
+def test_run_anytime_fixed_controller_is_static(small_ladder):
+    ladder, cfg, built = small_ladder
+    rep = run_anytime(ladder, cfg, 1.0, n=5, built=built,
+                      controller=FixedController(ladder, ladder.floor.name))
+    assert set(rep.rung_trace()) == {ladder.floor.name}
+    assert rep.switches == 0
+
+
+# ------------------------------------------------ degrade-before-shed -------
+
+def _primed_admission(confidence=0.95):
+    """Occupancy→latency model: ~1ms + 1ms per co-resident stream."""
+    from repro.runtime import AdmissionController
+    rng = np.random.default_rng(0)
+    adm = AdmissionController(confidence=confidence)
+    for _ in range(30):
+        for occ in (1, 2, 3, 4):
+            adm.observe_step(occ, 1e-3 + occ * 1e-3 + rng.normal(0, 5e-5))
+    return adm
+
+
+def _req(slo, factors=(), tenant="t"):
+    from repro.runtime import StreamRequest
+    return StreamRequest(tenant=tenant, prompt=np.array([1, 2], np.int32),
+                         max_new_tokens=4, deadline_s=slo,
+                         degrade_factors=factors)
+
+
+def test_degrade_factors_validation():
+    with pytest.raises(ValueError, match="degrade_factors"):
+        _req(1e-3, factors=(0.5,))
+
+
+def test_anytime_admission_degrades_before_shedding():
+    from repro.runtime import AnytimeAdmission
+    from repro.runtime.admission import ADMIT, SHED
+
+    adm = AnytimeAdmission(_primed_admission())
+    # SLO 1ms is unachievable even solo (~2ms): no ladder -> shed
+    assert adm.decide(_req(1e-3), 1, 0.0).action == SHED
+    assert adm.shed == 1 and adm.degraded == 0
+    # with a ladder, the x6 level fits the prospective occupancy -> seated
+    d = adm.decide(_req(1e-3, factors=(6.0,)), 1, 0.0)
+    assert d.action == ADMIT
+    assert d.request is not None and d.request.deadline_s == pytest.approx(6e-3)
+    assert adm.degraded == 1 and adm.shed == 1      # only the first was shed
+    assert "degraded SLO" in d.reason
+
+
+def test_anytime_admission_counts_repeated_defer_once():
+    """A head-of-line request rescued to DEFER is re-decided every drain
+    iteration; the unique-requests defer counter must not inflate."""
+    from repro.runtime import AnytimeAdmission
+    from repro.runtime.admission import DEFER
+
+    adm = AnytimeAdmission(_primed_admission())
+    # 3ms x1.5 = 4.5ms: achievable solo (~2ms) but not at occupancy 4 -> the
+    # degraded probe defers
+    req = _req(3e-3, factors=(1.5,))
+    for _ in range(4):
+        d = adm.decide(req, 3, 0.0)
+        assert d.action == DEFER
+    assert adm.deferred == 1
+    assert adm.shed == 0
+
+
+def test_anytime_admission_leaves_admissible_requests_alone():
+    from repro.runtime import AnytimeAdmission
+    from repro.runtime.admission import ADMIT
+
+    adm = AnytimeAdmission(_primed_admission())
+    d = adm.decide(_req(50e-3, factors=(2.0,)), 1, 0.0)
+    assert d.action == ADMIT and d.request is None and adm.degraded == 0
+
+
+def test_engine_anytime_requires_shedding_admission():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.runtime import AlwaysAdmit, MultiTenantConfig, MultiTenantEngine
+
+    cfg = get_config("rwkv6-3b", smoke=True).replace(num_layers=2, vocab_size=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="nothing to rescue"):
+        MultiTenantEngine(model, params,
+                          MultiTenantConfig(capacity=2, context=32),
+                          admission=AlwaysAdmit(), anytime=True)
+
+
+def test_multi_tenant_engine_anytime_mode_seats_degraded_stream():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.runtime import (
+        AdmissionController,
+        MultiTenantConfig,
+        MultiTenantEngine,
+        RequestQueue,
+    )
+
+    cfg = get_config("rwkv6-3b", smoke=True).replace(num_layers=2, vocab_size=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def build(anytime):
+        eng = MultiTenantEngine(
+            model, params,
+            MultiTenantConfig(capacity=2, context=32, warmup_steps=0),
+            admission=_primed_admission(),
+            anytime=anytime,
+        )
+        q = RequestQueue()
+        q.push(_req(1e-3, factors=(6.0,), tenant="av-cam"))
+        eng.admit_from(q, now=0.0)
+        return eng
+
+    shed_eng = build(anytime=False)
+    assert [r.tenant for r in shed_eng.shed] == ["av-cam"]
+
+    any_eng = build(anytime=True)
+    assert not any_eng.shed
+    (ts,) = any_eng.active.values()
+    assert ts.req.tenant == "av-cam"
+    assert ts.req.deadline_s == pytest.approx(6e-3)   # the granted contract
+    assert any_eng.aggregate_report()["degraded_streams"] == 1
+
+
+# ------------------------------------------------- simulator rung chains ----
+
+def test_simulator_runs_per_rung_stage_chains():
+    from repro.sched import SimConfig, StageSpec, TaskSpec, simulate
+
+    slow = (StageSpec("pre", "cpu", 0.002, 0.0),
+            StageSpec("infer", "accel", 0.040, 0.0),
+            StageSpec("post", "cpu", 0.020, 0.0))
+    fast = (StageSpec("pre", "cpu", 0.002, 0.0),
+            StageSpec("infer", "accel", 0.010, 0.0),
+            StageSpec("post", "cpu", 0.001, 0.0))
+    t = TaskSpec("det", 0.1, slow, rungs=(slow, fast),
+                 rung_fn=lambda j: 0 if j < 10 else 1, n_jobs=20)
+    res = simulate([t], SimConfig(cpu_cores=2, seed=1))
+    assert list(res.rungs["det"][:10]) == [0] * 10
+    assert list(res.rungs["det"][10:]) == [1] * 10
+    # the fidelity switch is visible in end-to-end latency
+    assert res.latencies["det"][:10].mean() > 3 * res.latencies["det"][10:].mean()
+
+
+def test_simulator_rungs_default_is_stages():
+    from repro.sched import SimConfig, StageSpec, TaskSpec, simulate
+
+    t = TaskSpec("a", 0.1, (StageSpec("post", "cpu", 0.01, 0.0),), n_jobs=5)
+    res = simulate([t], SimConfig(cpu_cores=1, seed=0))
+    assert list(res.rungs["a"]) == [0] * 5
+
+
+def test_simulator_out_of_range_rung_is_loud():
+    from repro.sched import SimConfig, StageSpec, TaskSpec, simulate
+
+    chain = (StageSpec("post", "cpu", 0.01, 0.0),)
+    t = TaskSpec("a", 0.1, chain, rungs=(chain,), rung_fn=lambda j: 2, n_jobs=2)
+    with pytest.raises(ValueError, match="outside"):
+        simulate([t], SimConfig(cpu_cores=1, seed=0))
+
+
+def test_one_stage_detector_rejects_unsupported_cell():
+    from repro.perception import OneStageDetector
+
+    with pytest.raises(ValueError, match="cell must be"):
+        OneStageDetector(cell=24)

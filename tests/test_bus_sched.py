@@ -123,6 +123,33 @@ def test_deadline_cbs_throttling_worst_variance(proposal_scale):
     assert cv(d_mean.latencies["pinet"]) > cv(fifo.latencies["pinet"])
 
 
+def test_deadline_cbs_budget_mechanics_deterministic():
+    """CBS mechanics, pinned exactly (jitter=0): a job whose stage exceeds
+    its runtime budget is throttled until its period end, the budget
+    replenishes, and the remainder completes in the next period — one
+    throttle per job, latency = period + remainder."""
+    period, budget, work = 0.1, 0.03, 0.05
+    t = TaskSpec(
+        "cbs", period, (StageSpec("post", "cpu", work, 0.0),),
+        policy="DEADLINE", deadline_budget=budget, n_jobs=5,
+    )
+    res = simulate([t], SimConfig(cpu_cores=1, tick=0.001))
+    assert res.throttle_events["cbs"] == 5                 # once per job
+    expect = period + (work - budget)                      # 0.1 + 0.02
+    assert np.allclose(res.latencies["cbs"], expect, atol=5e-3)
+    assert res.miss_rates["cbs"] == 1.0                    # all overrun
+
+    # a budget covering the whole stage never throttles and never misses
+    roomy = TaskSpec(
+        "cbs", period, (StageSpec("post", "cpu", work, 0.0),),
+        policy="DEADLINE", deadline_budget=2 * work, n_jobs=5,
+    )
+    res2 = simulate([roomy], SimConfig(cpu_cores=1, tick=0.001))
+    assert res2.throttle_events["cbs"] == 0
+    assert np.allclose(res2.latencies["cbs"], work, atol=5e-3)
+    assert res2.miss_rates["cbs"] == 0.0
+
+
 def test_simulator_deterministic():
     a = simulate([_pinet("OTHER", n=50)], SimConfig(cpu_cores=2, seed=7))
     b = simulate([_pinet("OTHER", n=50)], SimConfig(cpu_cores=2, seed=7))

@@ -2,6 +2,7 @@
 in this framework's own pipelines, plus training/serving integration.
 """
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +89,28 @@ def test_synchronizer_queue_size_damps_delay_variance():
     assert np.percentile(d_big, 99) <= np.percentile(d_small, 99) * 1.5
 
 
+def test_synchronizer_queue_overflow_drop_accounting():
+    """Insight 6 mechanism: a bounded per-topic queue drops its oldest
+    entry on overflow and counts every drop — the paper's fusion-loss
+    bookkeeping must be exact."""
+    sync = ApproxTimeSynchronizer(["a", "b"], queue_size=3, slop=0.01)
+    for i in range(10):
+        # topic b never arrives, so nothing can be emitted and topic a's
+        # queue must overflow deterministically
+        sync.add("a", float(i), None, now=float(i))
+    assert sync.dropped == 7                      # 10 pushed into 3 slots
+    assert [s for s, _ in sync.queues["a"]] == [7.0, 8.0, 9.0]
+    assert not sync.events
+
+    # matched traffic with a roomy queue drops nothing
+    sync2 = ApproxTimeSynchronizer(["a", "b"], queue_size=100, slop=0.01)
+    for i in range(10):
+        sync2.add("a", float(i), None, now=float(i))
+        sync2.add("b", float(i), None, now=float(i) + 0.001)
+    assert sync2.dropped == 0
+    assert len(sync2.events) == 10
+
+
 # ------------------------------------------------- training integration ----
 def test_trainer_runs_and_loss_decreases():
     from repro.launch.mesh import make_local_mesh
@@ -157,6 +180,31 @@ def test_engine_rejects_empty_prompt_and_seeds_policy_from_warmup():
     # but only the post-warmup 4 are scored as jobs
     assert policy._w.n == 6
     assert eng.jobs == 4
+
+
+def test_init_params_deterministic_across_processes():
+    """Regression: init_params folded ``hash(name)`` into the PRNG key —
+    salted per process by PYTHONHASHSEED, so the same seed produced
+    different parameters every run (surfaced as nondeterministic anytime
+    ladder quality).  The fold-in must be process-independent."""
+    import subprocess
+    import sys
+
+    prog = (
+        "import jax, jax.numpy as jnp;"
+        "from repro.perception.detector import OneStageDetector;"
+        "det = OneStageDetector();"
+        "p = det.init(jax.random.PRNGKey(7));"
+        "print(sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(p)))"
+    )
+    sums = []
+    for seed in ("1", "2"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, check=True)
+        sums.append(float(out.stdout.strip()))
+    assert sums[0] == sums[1]
 
 
 def test_checkpoint_roundtrip(tmp_path):
