@@ -28,6 +28,7 @@ MODULES = [
     "multi_tenant",
     "static_fix",
     "anytime",
+    "batched",
     "roofline",
 ]
 

@@ -17,6 +17,11 @@ variance sum), exposed as ``Prediction`` so the controller reasons about
 p99 quantiles, not just means.  Before a rung has been observed online,
 the calibrated ``stage_means`` serve as the prior (a configurable prior
 CV supplies the spread).
+
+Batched serving adds a fourth estimator: per-(rung, batch-size) latency
+(``SceneFeatures.batch_size``), a regression of shared batched-step time
+on the number of co-resident streams — see ``RungCostModel`` for the
+semantics and priors.
 """
 from __future__ import annotations
 
@@ -38,11 +43,35 @@ _CELLS_PER_OBJECT = 5.0
 
 @dataclasses.dataclass(frozen=True)
 class SceneFeatures:
-    """Observable pre-execution signals for one frame."""
+    """Observable pre-execution signals for one frame.
+
+    ``batch_size`` is the (rung, batch-size) feature for batched serving
+    (``repro.batched``): the number of co-resident streams expected to
+    share this frame's batched device step.  With ``batched`` unset, a
+    batch size of 1 (the default) keeps the cost model exactly as in
+    single-stream serving; above 1 the prediction switches to a per-rung
+    regression of *batched-step* latency on batch size, so the
+    controller's residual-deadline decision accounts for batching delay.
+    ``batched=True`` forces the batched route even at bucket size 1 — a
+    singleton bucket still pays a full capacity-wide padded step, which
+    the serial stage model would badly under-estimate (and which must
+    never pollute the serial per-stage predictors).  Like
+    ``proposals_prev`` these are pre-execution estimates — the
+    rung-bucket scheduler feeds last tick's bucket size, relying on the
+    same temporal coherence.
+    """
 
     proposals_prev: Optional[float] = None   # previous frame's proposal count
     rain_mm_per_hour: float = 0.0
     scenario: str = "city"
+    batch_size: float = 1.0                  # expected co-batch size (>= 1)
+    batched: Optional[bool] = None           # force the batched cost route
+
+    @property
+    def is_batched(self) -> bool:
+        if self.batched is not None:
+            return self.batched
+        return self.batch_size > 1.0
 
     def composite(self) -> float:
         """Scalar feature for the post-processing regression: the previous
@@ -63,6 +92,19 @@ class RungCostModel:
     latencies (the predictor defaults assume ~100ms signals; a 10ms
     measurement-noise floor would drown a 3ms stage and make every tail
     estimate worst-case).
+
+    **The (rung, batch-size) feature.**  Batched serving
+    (``repro.batched``) runs many streams through one shared device step,
+    whose latency is a function of the *bucket size*, not of any single
+    frame.  Observations with ``feats.is_batched`` therefore train a
+    separate ``FeaturePredictor`` regressing whole-step latency on batch
+    size (near-affine: a fixed-capacity padded batch has a large constant
+    term plus a small per-active-slot term), and batched predictions
+    come from that regression.  Before any batched
+    observation exists, the prior is the pessimistic serial bound —
+    single-frame latency × batch size — so an untrained controller never
+    *under*-estimates batching delay.  Single-frame behaviour
+    (``batch_size == 1``) is untouched.
     """
 
     def __init__(
@@ -83,12 +125,21 @@ class RungCostModel:
         self._host = KalmanPredictor(q=kalman_q, r=kalman_r)   # read + pre
         self._infer = KalmanPredictor(q=kalman_q, r=kalman_r)
         self._post = FeaturePredictor()
+        self._batch_step = FeaturePredictor()   # batched e2e vs batch size
         self.observations = 0
+        self.batched_observations = 0
 
     def observe(self, record: StageRecord, feats: SceneFeatures) -> None:
         """Feed one measured frame.  ``feats`` must be the features the
         caller *predicted with* for this frame, so the regression learns
-        the deployable mapping (prev-frame proposals → this post time)."""
+        the deployable mapping (prev-frame proposals → this post time).
+        Batched-step records (``feats.is_batched``) train only the
+        batch-size regression: a shared padded step is not an observation
+        of single-frame stage behaviour, whatever its bucket size."""
+        if feats.is_batched:
+            self._batch_step.observe(record.end_to_end, feats.batch_size)
+            self.batched_observations += 1
+            return
         st = record.stages
         self._host.observe(st.get("read", 0.0) + st.get("pre_processing", 0.0))
         self._infer.observe(st.get("inference", 0.0))
@@ -112,13 +163,27 @@ class RungCostModel:
             floor = max(floor, prior_std)
         return Prediction(p.mean, max(p.std, floor))
 
-    def predict(self, feats: SceneFeatures) -> Prediction:
+    def _predict_single(self, feats: SceneFeatures) -> Prediction:
         host = self._or_prior(self._host.predict(), "read", "pre_processing")
         infer = self._or_prior(self._infer.predict(), "inference")
         post = self._or_prior(self._post.predict(feats.composite()), "post_processing")
         mean = host.mean + infer.mean + post.mean
         std = math.sqrt(host.std ** 2 + infer.std ** 2 + post.std ** 2)
         return Prediction(mean, std)
+
+    def predict(self, feats: SceneFeatures) -> Prediction:
+        if not feats.is_batched:
+            return self._predict_single(feats)
+        single = self._predict_single(feats)
+        if self.batched_observations == 0:
+            # serial pessimistic prior: no batching gain assumed until the
+            # regression has seen a real batched step
+            mean = single.mean * feats.batch_size
+            return Prediction(mean, max(single.std * feats.batch_size,
+                                        self.prior_cv * mean))
+        p = self._batch_step.predict(feats.batch_size)
+        floor = self.prior_cv * max(p.mean, 0.0)
+        return Prediction(p.mean, max(p.std, floor))
 
 
 class LadderCostModel:

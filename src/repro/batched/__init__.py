@@ -1,0 +1,22 @@
+"""Batched multi-camera perception serving.
+
+``engine``    — ``BatchedPerceptionEngine``: N camera streams share one
+                fixed-capacity padded device batch (fused device
+                pre-processing + vmapped inference, one batched readback,
+                vectorized post) with slot carve-out so join/leave never
+                retraces.
+``scheduler`` — ``RungBucketScheduler``: per-stream anytime controllers
+                bucket streams by chosen rung each tick; the shared cost
+                model learns per-(rung, batch-size) latency so deadline
+                decisions account for batching delay.
+"""
+from .engine import BatchedPerceptionEngine, BatchedStreamState
+from .scheduler import RungBucketScheduler, ScheduledStream, TickResult
+
+__all__ = [
+    "BatchedPerceptionEngine",
+    "BatchedStreamState",
+    "RungBucketScheduler",
+    "ScheduledStream",
+    "TickResult",
+]

@@ -1,0 +1,286 @@
+"""Batched multi-camera perception engine — the perception analog of
+``runtime.MultiTenantEngine``.
+
+The paper's runtime perspective (§IV) attributes inference-time variance
+to co-resident DNN tasks contending for one accelerator; the follow-up
+multi-tenant work (PAPERS.md) makes *batching* the co-resident streams
+the predictability mechanism.  Here, N camera streams that previously
+paid N dispatches, N host round-trips, and N Python post-processing
+passes per tick share:
+
+* **one fused device step** — ``jax.vmap`` over the rung's
+  ``preprocess_device`` + ``infer`` composition, jitted once over a
+  fixed-capacity padded batch.  Joining/leaving streams only flips an
+  active mask and zeroes a slot's buffer; shapes never change, so the
+  step traces exactly once (asserted via ``trace_count``, same mechanism
+  as ``MultiTenantEngine``).
+* **one batched fixed-shape readback** — the rung's ``post_batch``
+  replaces the per-frame ``post`` loop with a single device→host copy
+  plus a vectorized ``_unscale``/keep-mask pass.
+
+Per-tick latency is attributed to every co-resident stream (per-stream
+``TimelineRecorder``), exactly as the multi-tenant decode engine
+attributes step latency to every seated tenant: your frame took that
+long because of who you shared the batch with.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.timing import StageTimer, TimelineRecorder
+from repro.perception.data import H, W
+from repro.perception.pipelines import (
+    BuiltPipeline,
+    FrameOutput,
+    build_pipeline,
+    preprocess_device,
+)
+
+__all__ = ["BatchedStreamState", "BatchedPerceptionEngine"]
+
+
+@dataclasses.dataclass
+class BatchedStreamState:
+    """One seated camera stream: its slot and per-stream instrumentation."""
+
+    stream_id: str
+    slot: int
+    recorder: TimelineRecorder = dataclasses.field(default_factory=TimelineRecorder)
+    frames: int = 0
+    last_output: Optional[FrameOutput] = None
+
+
+class BatchedPerceptionEngine:
+    """Serve many camera streams through one shared padded device batch.
+
+    ``capacity`` is the static batch size; streams join into free slots
+    and leave without ever changing the traced shapes.  ``tick`` runs one
+    shared frame step for every active stream.
+    """
+
+    def __init__(
+        self,
+        pipeline: str | BuiltPipeline,
+        capacity: int = 8,
+        scale: float = 1.0,
+        key: Optional[jax.Array] = None,
+        pad: bool = True,
+        image_shape: tuple[int, int, int] = (H, W, 3),
+        **det_kw,
+    ) -> None:
+        if capacity < 1:
+            raise ValueError(
+                f"capacity must be >= 1 (got {capacity}): a zero-slot "
+                "engine could never seat a stream"
+            )
+        if isinstance(pipeline, BuiltPipeline):
+            if scale != 1.0 or key is not None or pad is not True or det_kw:
+                raise ValueError(
+                    "pipeline was passed already built; scale/key/pad/"
+                    "detector kwargs belong to build_pipeline and would "
+                    "be silently ignored here"
+                )
+            self.built = pipeline
+        else:
+            self.built = build_pipeline(pipeline, scale=scale, key=key,
+                                        pad=pad, **det_kw)
+        self.capacity = capacity
+        self.image_shape = image_shape
+        # raw frames land here; pre-processing runs fused on device, so the
+        # host-side per-tick work is a plain per-slot memcpy
+        self._raw = np.zeros((capacity, *image_shape), np.float32)
+
+        self.trace_count = 0
+        built = self.built
+        vm = jax.vmap(
+            lambda raw: built.infer(preprocess_device(raw, built.scale, built.pad))
+        )
+
+        def counted(raw_batch):
+            # Python side effect fires only while tracing: a recompile —
+            # which static shapes are supposed to rule out — is observable.
+            self.trace_count += 1
+            return vm(raw_batch)
+
+        self._step = jax.jit(counted)
+        self._free: deque[int] = deque(range(capacity))
+        self.active: Dict[str, BatchedStreamState] = {}
+        self.ticks = 0
+        self.tick_log: list[tuple[int, float]] = []   # (n_active, latency)
+        self.recorder = TimelineRecorder()            # engine-level (per tick)
+        self._compiled = False
+
+    # ---------------- join / leave ----------------
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def join(self, stream_id: str) -> BatchedStreamState:
+        """Seat a stream in a free slot.  Raises when the batch is full."""
+        if stream_id in self.active:
+            raise ValueError(f"stream {stream_id!r} is already seated")
+        if not self._free:
+            raise RuntimeError(
+                f"no free slot (capacity {self.capacity}, "
+                f"{self.n_active} active)"
+            )
+        slot = self._free.popleft()
+        self._raw[slot] = 0.0                 # slot carve-out: blank frame
+        st = BatchedStreamState(stream_id=stream_id, slot=slot)
+        self.active[stream_id] = st
+        return st
+
+    def leave(self, stream_id: str) -> BatchedStreamState:
+        st = self.active.pop(stream_id)
+        self._raw[st.slot] = 0.0
+        self._free.append(st.slot)
+        return st
+
+    # ---------------- stepping ----------------
+    def compile(self) -> None:
+        """Trace + compile the batched step so the first real tick is not
+        a multi-second XLA outlier.  Idempotent."""
+        if self._compiled:
+            return
+        dev = self._step(jnp.asarray(self._raw))
+        jax.block_until_ready(dev)
+        self._compiled = True
+
+    def probe(self, frames=None):
+        """One timed full-capacity step, *not* attributed to any stream —
+        a calibration sample of the batched step cost at this capacity.
+        The rung-bucket scheduler seeds its per-(rung, batch-size) cost
+        model with this, so the cold-start prior is a measured batched
+        step rather than the pessimistic serial bound (under which no
+        stream would ever judge an unobserved rung's bucket to fit, and
+        fidelity could never recover).
+
+        ``frames`` (a sequence of raw images, cycled across the slots)
+        makes the probe representative: on blank buffers a
+        post-dominated rung like two_stage would measure near-zero
+        post-processing and seed an optimistic prior.  Slot buffers are
+        restored afterwards.  Returns the ``StageRecord``."""
+        self.compile()
+        mask = np.ones(self.capacity, bool)
+        saved = None
+        if frames is not None:
+            saved = self._raw.copy()
+            for b in range(self.capacity):
+                self._raw[b] = frames[b % len(frames)]
+        timer = StageTimer()
+        with timer.stage("inference"):
+            dev = self._step(jnp.asarray(self._raw))
+            jax.block_until_ready(dev)
+        with timer.stage("post_processing"):
+            if self.built.post_batch is not None:
+                self.built.post_batch(dev, mask)
+            else:
+                leaves = jax.tree.map(np.asarray, dev)
+                for b in range(self.capacity):
+                    self.built.post(jax.tree.map(lambda x: x[b], leaves))
+        rec = timer.finish()
+        rec.meta["batch_size"] = float(self.capacity)
+        if saved is not None:
+            self._raw[:] = saved
+        return rec
+
+    def tick(self, frames: Mapping[str, np.ndarray]):
+        """One shared batch step over every active stream's current frame.
+
+        ``frames`` maps stream id → raw (H, W, 3) image; every key must be
+        a seated stream.  Streams without a frame this tick keep their
+        previous (or blank) slot content and receive no output — a camera
+        that skipped a tick does not stall its co-residents.
+
+        Returns ``(StageRecord, {stream_id: FrameOutput})``; the record is
+        also appended to every *served* stream's recorder (shared-fate
+        attribution, as in the multi-tenant decode engine).
+        """
+        unknown = set(frames) - set(self.active)
+        if unknown:
+            raise KeyError(f"frames for unseated streams: {sorted(unknown)}")
+        if not self.active or not frames:
+            # nothing to serve: don't burn a capacity-wide device step or
+            # log a zero-frame tick into the throughput accounting
+            return None, {}
+        self.compile()
+
+        served = [self.active[sid] for sid in frames]
+        active_mask = np.zeros(self.capacity, bool)
+        for st in served:
+            active_mask[st.slot] = True
+
+        timer = StageTimer()
+        with timer.stage("read"):
+            for sid, st in zip(frames, served):
+                self._raw[st.slot] = frames[sid]
+        with timer.stage("inference"):
+            # pre-processing is fused into this device step (vmap over
+            # preprocess_device + infer): one upload, one dispatch
+            dev = self._step(jnp.asarray(self._raw))
+            jax.block_until_ready(dev)
+        with timer.stage("post_processing"):
+            outputs: Dict[str, FrameOutput] = {}
+            if self.built.post_batch is not None:
+                per_slot = self.built.post_batch(dev, active_mask)
+            else:
+                # generic fallback: one batched readback, per-slot serial post
+                leaves = jax.tree.map(np.asarray, dev)
+                per_slot = [
+                    self.built.post(jax.tree.map(lambda x: x[b], leaves))
+                    if active_mask[b] else None
+                    for b in range(self.capacity)
+                ]
+            for sid, st in zip(frames, served):
+                outputs[sid] = per_slot[st.slot]
+
+        rec = timer.finish()
+        n_served = len(served)
+        rec.meta["n_active"] = float(self.n_active)
+        rec.meta["batch_size"] = float(n_served)
+        lat = rec.end_to_end
+
+        self.ticks += 1
+        self.tick_log.append((n_served, lat))
+        self.recorder.add(rec)
+        for sid, st in zip(frames, served):
+            st.recorder.add(rec)
+            st.frames += 1
+            st.last_output = outputs[sid]
+        return rec, outputs
+
+    # ---------------- reporting ----------------
+    def per_stream_report(self) -> list[dict]:
+        rows = []
+        for st in self.active.values():
+            series = st.recorder.end_to_end_series()
+            rows.append({
+                "stream": st.stream_id,
+                "frames": st.frames,
+                "mean_s": float(series.mean()) if series.size else float("nan"),
+                "p99_s": float(np.percentile(series, 99)) if series.size else float("nan"),
+            })
+        rows.sort(key=lambda r: r["stream"])
+        return rows
+
+    def aggregate_report(self) -> dict:
+        lats = np.asarray([lat for _, lat in self.tick_log])
+        frames = sum(n for n, _ in self.tick_log)
+        return {
+            "ticks": self.ticks,
+            "frames": frames,
+            "frames_per_s": frames / lats.sum() if lats.size else float("nan"),
+            "tick_mean_s": float(lats.mean()) if lats.size else float("nan"),
+            "tick_p99_s": float(np.percentile(lats, 99)) if lats.size else float("nan"),
+            "traces": self.trace_count,
+        }

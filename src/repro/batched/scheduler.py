@@ -1,0 +1,233 @@
+"""Rung-bucketed frame scheduler: anytime fidelity control over the
+batched multi-camera engine.
+
+Each tick, every stream's contract controller picks the rung that fits
+its residual deadline; streams that chose the same rung share one
+batched device step (one engine per rung, all at full stream capacity so
+bucket migration never retraces).  The shared ``LadderCostModel`` learns
+per-(rung, batch-size) latency — ``SceneFeatures.batch_size`` — so the
+controller's residual-deadline decision accounts for batching delay: a
+rung that fits alone may not fit when seven co-residents share its
+bucket, and the model sees exactly that.
+
+Batch size is a pre-execution feature with the same temporal-coherence
+argument the cost model already uses for proposal counts: a stream's
+expected co-batch size next tick is approximated by its current rung's
+bucket size last tick (pessimistically, all active streams before any
+history).  Batched-step cost is modeled on batch size alone —
+per-bucket proposal variation folds into the regression's residual
+spread (see ``RungCostModel``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+import jax
+import numpy as np
+
+from repro.anytime.controller import ContractController, ControllerConfig
+from repro.anytime.cost import LadderCostModel, SceneFeatures
+from repro.anytime.ladder import Ladder, frame_quality
+from repro.perception.data import Scene, SceneConfig, generate_scene
+from repro.perception.pipelines import build_pipeline
+
+from .engine import BatchedPerceptionEngine
+
+__all__ = ["ScheduledStream", "TickResult", "RungBucketScheduler"]
+
+
+@dataclasses.dataclass
+class ScheduledStream:
+    """One camera stream under scheduling: its contract controller (rung
+    hysteresis is per stream) plus running accounting."""
+
+    stream_id: str
+    budget_s: float
+    controller: ContractController
+    prev_proposals: Optional[float] = None
+    frames: int = 0
+    misses: int = 0
+    qualities: list = dataclasses.field(default_factory=list)
+    latencies: list = dataclasses.field(default_factory=list)
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.frames if self.frames else float("nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class TickResult:
+    """One tick's outcome: which rung served which bucket, per stream."""
+
+    buckets: Dict[str, list]          # rung name -> [stream ids]
+    latencies: Dict[str, float]       # rung name -> batched step latency
+    outputs: Dict[str, object]        # stream id -> FrameOutput
+    rows: list                        # per-stream dict rows
+
+
+class RungBucketScheduler:
+    """Groups streams by their controller-chosen rung each tick and serves
+    every bucket with one batched step."""
+
+    def __init__(
+        self,
+        ladder: Ladder,
+        capacity: int = 8,
+        key: Optional[jax.Array] = None,
+        ctl_cfg: ControllerConfig = ControllerConfig(),
+    ) -> None:
+        self.ladder = ladder
+        self.capacity = capacity
+        self.ctl_cfg = ctl_cfg
+        # one cost model shared by every stream: latency is a property of
+        # the shared accelerator, not of any one camera
+        self.cost = LadderCostModel(ladder)
+        # one engine per rung, all at full capacity: any bucket split can
+        # be seated and membership churn never changes traced shapes
+        self.engines: Dict[str, BatchedPerceptionEngine] = {}
+        for rung in ladder:
+            built = build_pipeline(rung.pipeline, scale=rung.scale,
+                                   key=key, pad=False)
+            self.engines[rung.name] = BatchedPerceptionEngine(
+                built, capacity=capacity)
+        self.streams: Dict[str, ScheduledStream] = {}
+        self._last_bucket_size: Dict[str, int] = {}
+        self.ticks = 0
+
+    def warm(self, probe_cfg: SceneConfig = SceneConfig()) -> None:
+        """Compile every rung's batched step up front and seed the cost
+        model with one measured full-capacity probe per rung.  Without the
+        probe, an unobserved rung's batched prediction stays at the
+        pessimistic serial bound and the controller could never judge an
+        upgrade into that rung's bucket to fit.  The probe runs on
+        ``probe_cfg`` synthetic scenes, not blank buffers, so rungs with
+        data-dependent post-processing (two_stage) seed a representative
+        cost rather than a zero-proposal best case."""
+        frames = [generate_scene(probe_cfg, i).image
+                  for i in range(self.capacity)]
+        for rung_name, eng in self.engines.items():
+            rec = eng.probe(frames)
+            self.cost.observe(
+                rung_name, rec,
+                SceneFeatures(batch_size=float(self.capacity), batched=True))
+
+    # ---------------- stream membership ----------------
+    def add_stream(self, stream_id: str, budget_s: float) -> ScheduledStream:
+        if stream_id in self.streams:
+            raise ValueError(f"stream {stream_id!r} already exists")
+        if len(self.streams) >= self.capacity:
+            raise RuntimeError(
+                f"scheduler at capacity ({self.capacity} streams)")
+        st = ScheduledStream(
+            stream_id=stream_id, budget_s=budget_s,
+            controller=ContractController(self.ladder, cost=self.cost,
+                                          cfg=self.ctl_cfg),
+        )
+        self.streams[stream_id] = st
+        return st
+
+    def remove_stream(self, stream_id: str) -> ScheduledStream:
+        st = self.streams.pop(stream_id)
+        for eng in self.engines.values():
+            if stream_id in eng.active:
+                eng.leave(stream_id)
+        return st
+
+    # ---------------- the tick ----------------
+    def _features(self, st: ScheduledStream, scene: Scene) -> SceneFeatures:
+        rung = st.controller.current.name
+        return SceneFeatures(
+            proposals_prev=st.prev_proposals,
+            rain_mm_per_hour=scene.rain,
+            scenario=scene.scenario,
+            batch_size=float(self._last_bucket_size.get(
+                rung, max(len(self.streams), 1))),
+            # always the batched cost route: even a singleton bucket pays
+            # a full capacity-wide padded step
+            batched=True,
+        )
+
+    def tick(self, scenes: Mapping[str, Scene],
+             budgets: Optional[Mapping[str, float]] = None) -> TickResult:
+        """Serve one frame for every stream in ``scenes``.
+
+        ``budgets`` overrides per-stream residual budgets for this tick
+        (contention injection, as in ``run_anytime``'s ``budget_fn``).
+        """
+        unknown = set(scenes) - set(self.streams)
+        if unknown:
+            raise KeyError(f"scenes for unknown streams: {sorted(unknown)}")
+
+        # 1. every stream picks its rung for this tick
+        buckets: Dict[str, list[str]] = {}
+        for sid, scene in scenes.items():
+            st = self.streams[sid]
+            budget = budgets[sid] if budgets is not None else st.budget_s
+            sel = st.controller.select(budget, self._features(st, scene))
+            buckets.setdefault(sel.rung.name, []).append(sid)
+
+        # 2. serve each bucket with one batched step
+        latencies: Dict[str, float] = {}
+        outputs: Dict[str, object] = {}
+        rows: list[dict] = []
+        for rung_name, members in buckets.items():
+            eng = self.engines[rung_name]
+            # migrate membership: leave streams that moved away, join the
+            # ones that moved in (slot churn only — never a retrace)
+            for sid in [s for s in eng.active if s not in members]:
+                eng.leave(sid)
+            for sid in members:
+                if sid not in eng.active:
+                    eng.join(sid)
+            record, outs = eng.tick(
+                {sid: scenes[sid].image for sid in members})
+            lat = record.end_to_end
+            latencies[rung_name] = lat
+            outputs.update(outs)
+
+            # 3. one cost observation per bucket: batched-step latency at
+            # this (rung, batch-size)
+            b = len(members)
+            self.cost.observe(
+                rung_name, record,
+                SceneFeatures(batch_size=float(b), batched=True))
+            self._last_bucket_size[rung_name] = b
+
+            # 4. per-stream accounting: every bucket member experienced the
+            # shared step latency
+            for sid in members:
+                st = self.streams[sid]
+                budget = budgets[sid] if budgets is not None else st.budget_s
+                out = outs[sid]
+                q = frame_quality(scenes[sid], out)
+                miss = lat > budget
+                st.frames += 1
+                st.misses += int(miss)
+                st.latencies.append(lat)
+                if q is not None:
+                    st.qualities.append(q)
+                st.prev_proposals = out.num_proposals
+                rows.append({
+                    "stream": sid, "rung": rung_name, "batch_size": b,
+                    "budget_s": budget, "latency_s": lat, "miss": miss,
+                    "quality": q,
+                })
+        self.ticks += 1
+        return TickResult(buckets=buckets, latencies=latencies,
+                          outputs=outputs, rows=rows)
+
+    # ---------------- reporting ----------------
+    def report(self) -> list[dict]:
+        rows = []
+        for sid, st in sorted(self.streams.items()):
+            lats = np.asarray(st.latencies)
+            rows.append({
+                "stream": sid,
+                "frames": st.frames,
+                "miss_rate": st.miss_rate,
+                "mean_quality": float(np.mean(st.qualities)) if st.qualities else float("nan"),
+                "p99_s": float(np.percentile(lats, 99)) if lats.size else float("nan"),
+                "switches": st.controller.switches,
+            })
+        return rows

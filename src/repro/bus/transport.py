@@ -50,7 +50,7 @@ class CopyTransport:
     def latencies(self, msg: Message, n_subscribers: int, rng) -> np.ndarray:
         """Per-subscriber latency: subscriber i waits for copies 0..i."""
         per_copy = msg.size_bytes / self.copy_bw + self.setup_s
-        copies = per_copy * (1.0 + rng.lognormal(0.0, self.jitter_sigma, n_subscribers) - 1.0)
+        copies = per_copy * rng.lognormal(0.0, self.jitter_sigma, n_subscribers)
         ends = np.cumsum(np.maximum(copies, 1e-7))
         return ends
 

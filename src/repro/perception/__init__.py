@@ -9,6 +9,7 @@ from .pipelines import (
     FrameOutput,
     build_pipeline,
     preprocess,
+    preprocess_device,
     run_frame,
     run_lane,
     run_lane_static,
@@ -22,6 +23,6 @@ __all__ = [
     "OneStageDetector", "TwoStageDetector", "dynamic_nms", "static_nms",
     "LaneDetector", "ApproxTimeSynchronizer", "FusionEvent",
     "PIPELINES", "BuiltPipeline", "FrameOutput", "build_pipeline",
-    "preprocess", "run_frame", "run_lane", "run_lane_static",
-    "run_one_stage", "run_pipeline", "run_two_stage",
+    "preprocess", "preprocess_device", "run_frame", "run_lane",
+    "run_lane_static", "run_one_stage", "run_pipeline", "run_two_stage",
 ]

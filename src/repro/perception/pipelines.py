@@ -18,6 +18,7 @@ quality can be scored against ``Scene.boxes``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable, Dict, Iterable, Optional
 
 import jax
@@ -42,6 +43,7 @@ __all__ = [
     "run_lane",
     "run_lane_static",
     "preprocess",
+    "preprocess_device",
 ]
 
 
@@ -83,6 +85,33 @@ def preprocess(image: np.ndarray, scale: float = 1.0, pad: bool = True) -> np.nd
     return img.astype(np.float32)
 
 
+def preprocess_device(image: jax.Array, scale: float = 1.0, pad: bool = True) -> jax.Array:
+    """``preprocess`` as a traceable device computation, stage for stage.
+
+    The batched engine folds pre-processing into the one jitted batch step
+    (``vmap`` over this + ``infer``): N streams then pay one fused device
+    pass instead of N host-side NumPy passes.  Shapes are static — the λ
+    gather indices are computed from the (trace-time) input shape exactly
+    as the host version computes them, so the two paths agree numerically.
+    """
+    img = image
+    if scale != 1.0:
+        h, w = int(img.shape[0]), int(img.shape[1])
+        nh, nw = max(int(h * scale), 8), max(int(w * scale), 8)
+        if not pad:
+            nh, nw = max(nh // 8 * 8, 8), max(nw // 8 * 8, 8)
+        ys = (np.arange(nh) * (h / nh)).astype(np.int64)
+        xs = (np.arange(nw) * (w / nw)).astype(np.int64)
+        img = img[ys][:, xs]
+        if pad:
+            out = jnp.zeros(image.shape, jnp.float32)
+            ch, cw = min(h, nh), min(w, nw)
+            img = out.at[:ch, :cw].set(img[:ch, :cw])
+    img = img[..., ::-1]
+    img = (img - img.mean()) / (img.std() + 1e-6)
+    return img.astype(jnp.float32)
+
+
 @dataclasses.dataclass(frozen=True)
 class FrameOutput:
     """One frame's host-side result: detections mapped back to the
@@ -96,13 +125,22 @@ class FrameOutput:
 @dataclasses.dataclass
 class BuiltPipeline:
     """A pipeline variant ready to run: a jitted device stage and a host
-    post stage.  The runner owns the timing; this owns the compute."""
+    post stage.  The runner owns the timing; this owns the compute.
+
+    ``post_batch`` is the vectorized form of ``post`` for the batched
+    multi-camera engine (``repro.batched``): it takes the batched device
+    outputs plus an active-slot mask, performs ONE fixed-shape readback
+    for the whole batch, and returns a per-slot ``FrameOutput`` list
+    (``None`` for inactive slots).  Factories that cannot vectorize their
+    post stage leave it ``None``; the engine falls back to slicing the
+    batch through ``post`` per slot."""
 
     name: str
     scale: float
     infer: Callable[[jax.Array], Any]        # device stage (jitted)
     post: Callable[[Any], FrameOutput]       # host post-processing stage
     pad: bool = True                         # False: truly smaller λ input
+    post_batch: Optional[Callable[[Any, np.ndarray], list]] = None
 
 
 PIPELINES: Dict[str, Callable[..., BuiltPipeline]] = {}
@@ -141,7 +179,10 @@ def _effective_scales(scale: float, pad: bool) -> tuple[float, float]:
 def _unscale(boxes: np.ndarray, scale: float, pad: bool) -> np.ndarray:
     """Detections on a λ-scaled input live in the shrunk frame; map them
     back (per axis, using the effective scales) so quality is comparable
-    across rungs."""
+    across rungs.  Broadcasts over any (..., 4) shape, so the batched
+    post paths unscale a whole (B, k, 4) readback in one pass; the
+    per-element division is identical either way, so masking kept boxes
+    before or after unscaling yields the same floats."""
     sy, sx = _effective_scales(scale, pad)
     if sy == sx == 1.0 or not len(boxes):
         return boxes
@@ -162,7 +203,22 @@ def _make_one_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) ->
         return FrameOutput(boxes=b, num_objects=float(k.sum()),
                            num_proposals=float(det.top_k))
 
-    return BuiltPipeline("one_stage", scale, infer, post, pad=pad)
+    def post_batch(dev, active: np.ndarray) -> list:
+        boxes, _, keep = dev
+        kb = np.asarray(keep)                 # (B, k) — one batched readback
+        bb = _unscale(np.asarray(boxes), scale, pad)
+        outs: list[Optional[FrameOutput]] = []
+        for b in range(kb.shape[0]):
+            if not active[b]:
+                outs.append(None)
+                continue
+            outs.append(FrameOutput(
+                boxes=bb[b][kb[b]], num_objects=float(kb[b].sum()),
+                num_proposals=float(det.top_k)))
+        return outs
+
+    return BuiltPipeline("one_stage", scale, infer, post, pad=pad,
+                         post_batch=post_batch)
 
 
 @register_pipeline("early_exit")
@@ -188,7 +244,23 @@ def _make_two_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) ->
                            num_objects=float(len(boxes)),
                            num_proposals=float(n_prop))
 
-    return BuiltPipeline("two_stage", scale, infer, post, pad=pad)
+    def post_batch(dev, active: np.ndarray) -> list:
+        feat, obj = dev
+        per_slot = det.post_host_batch(
+            params, np.asarray(feat), np.asarray(obj), active=active)
+        outs: list[Optional[FrameOutput]] = []
+        for slot in per_slot:
+            if slot is None:
+                outs.append(None)
+                continue
+            boxes, n_prop = slot
+            outs.append(FrameOutput(
+                boxes=_unscale(np.asarray(boxes), scale, pad),
+                num_objects=float(len(boxes)), num_proposals=float(n_prop)))
+        return outs
+
+    return BuiltPipeline("two_stage", scale, infer, post, pad=pad,
+                         post_batch=post_batch)
 
 
 _NO_BOXES = np.zeros((0, 4), np.float32)
@@ -256,7 +328,10 @@ def _scenes(cfg: SceneConfig, n: int, images: Optional[Iterable[np.ndarray]] = N
             sc.image = im
             yield sc
     else:
-        for i in range(n):
+        # start at 1: scene 0 is reserved for the synthetic warmup frame,
+        # keeping the recorded scene sequence identical to the historical
+        # contract (frames 1..n)
+        for i in range(1, n + 1):
             yield generate_scene(cfg, i)
 
 
@@ -273,22 +348,40 @@ def run_pipeline(
 ):
     """Drive any registered pipeline through the stage-timed frame loop.
 
-    Frame 0 is a warmup (XLA compilation) and is never recorded.  With
-    ``collect=True`` returns ``(recorder, [(scene, FrameOutput), ...])``
-    so callers can score detections against ground truth; otherwise just
-    the recorder (the legacy contract).  ``built`` reuses an already-jitted
-    pipeline (the anytime runner keeps one per rung).
+    The warmup frame (XLA compilation outlier) is a *synthetic* scene and
+    is never recorded — caller-supplied ``images`` are all real frames, so
+    the recorded count always equals the supplied count.  (Historically the
+    first user image was silently consumed as the unrecorded warmup frame:
+    n images in, n−1 records out, frame 0 lost.)  With ``collect=True``
+    returns ``(recorder, [(scene, FrameOutput), ...])`` so callers can
+    score detections against ground truth; otherwise just the recorder
+    (the legacy contract).  ``built`` reuses an already-jitted pipeline
+    (the anytime runner keeps one per rung).
     """
     if built is None:
         built = build_pipeline(name, scale=scale, key=key, pad=pad)
+    # warm up on a synthetic frame, never a caller-supplied one: the XLA
+    # compile outlier is discarded without consuming user input.  The
+    # warmup frame takes the first user image's SHAPE (jit traces per
+    # shape — a canonical-shape warmup would leave oddly-sized caller
+    # images to compile inside the recorded loop).
+    warm_scene = generate_scene(cfg, 0)
+    if images is not None:
+        it = iter(images)
+        first = next(it, None)
+        if first is None:
+            return (TimelineRecorder(), []) if collect else TimelineRecorder()
+        images = itertools.chain([first], it)
+        if first.shape != warm_scene.image.shape:
+            warm_scene.image = np.zeros_like(first)
+    run_frame(built, warm_scene)                 # warmup, never recorded
     rec = TimelineRecorder()
     outputs: list[tuple[Scene, FrameOutput]] = []
-    for i, scene in enumerate(_scenes(cfg, n + 1, images)):
+    for scene in _scenes(cfg, n, images):
         record, out = run_frame(built, scene)
-        if i > 0:
-            rec.add(record)
-            if collect:
-                outputs.append((scene, out))
+        rec.add(record)
+        if collect:
+            outputs.append((scene, out))
     return (rec, outputs) if collect else rec
 
 

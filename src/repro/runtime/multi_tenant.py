@@ -183,7 +183,9 @@ class MultiTenantEngine:
 
         self._state: DecodeState = model.init_decode_state(cfg.capacity, cfg.context)
         self._tokens = np.zeros(cfg.capacity, np.int32)
-        self._free: list[int] = list(range(cfg.capacity))
+        # deque: admissions pop the head and departures push the tail on the
+        # hot path — list.pop(0) was O(capacity) churn per seat
+        self._free: deque[int] = deque(range(cfg.capacity))
         self.active: dict[int, TenantState] = {}
         self.finished: list[TenantState] = []
         self.shed: list[StreamRequest] = []
@@ -224,7 +226,7 @@ class MultiTenantEngine:
                 f"no free slot (capacity {self.cfg.capacity}, "
                 f"{self.n_active} active)"
             )
-        slot = self._free.pop(0)
+        slot = self._free.popleft()
         self._state = self._reset_slot(self._state, slot)
         policy = self.policy_factory(req)
         if isinstance(policy, DynamicDeadline):

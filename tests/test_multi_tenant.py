@@ -101,6 +101,23 @@ def test_join_full_batch_raises():
         eng.join(req("b", [2], n=2))
 
 
+def test_free_slot_order_is_fifo_after_deque_swap():
+    """Regression for the list.pop(0) → deque change: admissions must
+    still hand out slots head-first, and freed slots recycle at the tail
+    (the exact semantics the O(n) list version had)."""
+    from collections import deque
+
+    _, eng = make_engine(capacity=3)
+    assert isinstance(eng._free, deque)
+    a = eng.join(req("a", [1], n=2))
+    b = eng.join(req("b", [2], n=2))
+    assert (a.slot, b.slot) == (0, 1)
+    eng.leave(a.slot)                   # 0 recycles behind the free tail
+    c = eng.join(req("c", [3], n=2))
+    d = eng.join(req("d", [4], n=2))
+    assert (c.slot, d.slot) == (2, 0)
+
+
 def test_slot_carveout_isolates_tenants():
     """A slot's recurrent state is reset on join: a stream must generate
     the same tokens whether it follows another tenant in the slot or runs
