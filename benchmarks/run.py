@@ -29,6 +29,7 @@ MODULES = [
     "static_fix",
     "anytime",
     "batched",
+    "scenarios",
     "roofline",
 ]
 

@@ -1,9 +1,29 @@
 """Repo-root pytest bootstrap: make ``import repro`` work without the
 ``PYTHONPATH=src`` incantation (pytest.ini's ``pythonpath = src`` handles
-pytest >= 7; this keeps direct collection and IDE runners working too)."""
+pytest >= 7; this keeps direct collection and IDE runners working too).
+
+Also registers ``--regen-golden``: the golden scenario-replay tests
+(tests/test_scenarios.py) rewrite their fixtures instead of comparing
+against them, so an *intentional* behaviour change lands as an explicit
+fixture diff in the same commit."""
 import sys
 from pathlib import Path
+
+import pytest
 
 SRC = str(Path(__file__).resolve().parent / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite the golden scenario-replay fixtures (tests/golden/) "
+             "instead of asserting against them",
+    )
+
+
+@pytest.fixture
+def regen_golden(request):
+    return request.config.getoption("--regen-golden")

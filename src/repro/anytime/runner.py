@@ -17,14 +17,21 @@ from typing import Callable, Iterable, Optional
 import numpy as np
 
 from repro.core.timing import TimelineRecorder
-from repro.perception.data import SceneConfig, generate_scene
+from repro.perception.data import Scene, SceneConfig, generate_scene
 from repro.perception.pipelines import BuiltPipeline, run_frame
 
 from .controller import ContractController, FixedController
 from .cost import SceneFeatures
 from .ladder import Ladder, Rung, frame_quality
 
-__all__ = ["FrameResult", "AnytimeReport", "build_rungs", "run_anytime"]
+__all__ = [
+    "FrameResult",
+    "AnytimeReport",
+    "build_rungs",
+    "run_anytime",
+    "trace_budget_fn",
+    "trace_scene_fn",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +96,30 @@ def build_rungs(rungs: Iterable[Rung], cfg: SceneConfig, key=None) -> dict[str, 
     return built
 
 
+def trace_budget_fn(trace) -> Callable[[int], float]:
+    """Adapt a ``repro.scenarios.ScenarioTrace`` contention/budget profile
+    into ``run_anytime``'s per-frame ``budget_fn``: frame ``i`` gets the
+    trace's interpolated budget at tick ``i`` (past the trace's end, the
+    final segment's endpoint holds)."""
+    return lambda i: trace.budget_at_tick(i)
+
+
+def trace_scene_fn(trace, stream_id: str) -> Callable[[int], Scene]:
+    """Adapt one trace stream's segment-parameterized conditions into
+    ``run_anytime``'s per-frame ``scene_fn`` (single-stream episodes: the
+    scenario mix, rain ramp and per-segment seeds of ``stream_id`` without
+    the multi-stream replayer).  Only the per-tick configs are
+    materialized — scenes render lazily per call (a rendered frame is
+    ~0.4 MB; pinning a long episode's worth would cost O(ticks) images)."""
+    cfgs = list(trace.stream_configs(stream_id))
+
+    def fn(i: int) -> Scene:
+        cfg, idx = cfgs[min(i, len(cfgs) - 1)]
+        return generate_scene(cfg, idx)
+
+    return fn
+
+
 def run_anytime(
     ladder: Ladder,
     cfg: SceneConfig,
@@ -98,6 +129,7 @@ def run_anytime(
     key=None,
     budget_fn: Optional[Callable[[int], float]] = None,
     built: Optional[dict[str, BuiltPipeline]] = None,
+    scene_fn: Optional[Callable[[int], Scene]] = None,
 ) -> AnytimeReport:
     """Run ``n`` frames under a per-frame residual deadline.
 
@@ -105,7 +137,9 @@ def run_anytime(
     ``FixedController`` for the static A/B baseline.  ``budget_fn(i)``
     overrides the constant budget per frame (contention injection).
     ``built`` reuses pre-compiled rungs across runs so A/B arms share one
-    compilation cost.
+    compilation cost.  ``scene_fn(i)`` overrides the stationary ``cfg``
+    stream with arbitrary per-frame scenes (time-varying episodes — see
+    ``trace_scene_fn``/``trace_budget_fn``).
     """
     if built is None:
         built = build_rungs(ladder, cfg, key)
@@ -114,7 +148,7 @@ def run_anytime(
     frames: list[FrameResult] = []
     prev_proposals: Optional[float] = None
     for i in range(n):
-        scene = generate_scene(cfg, i + 1)
+        scene = scene_fn(i) if scene_fn is not None else generate_scene(cfg, i + 1)
         budget = budget_fn(i) if budget_fn is not None else budget_s
         feats = SceneFeatures(
             proposals_prev=prev_proposals,

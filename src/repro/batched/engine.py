@@ -27,12 +27,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, Mapping, Optional
+from typing import Callable, Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bus.clock import SimClock
 from repro.core.timing import StageTimer, TimelineRecorder
 from repro.perception.data import H, W
 from repro.perception.pipelines import (
@@ -72,6 +73,8 @@ class BatchedPerceptionEngine:
         key: Optional[jax.Array] = None,
         pad: bool = True,
         image_shape: tuple[int, int, int] = (H, W, 3),
+        clock: Optional[SimClock] = None,
+        stage_cost: Optional[Callable[[str, int, float], float]] = None,
         **det_kw,
     ) -> None:
         if capacity < 1:
@@ -92,6 +95,14 @@ class BatchedPerceptionEngine:
                                         pad=pad, **det_kw)
         self.capacity = capacity
         self.image_shape = image_shape
+        # virtual-time replay (repro.scenarios): ``stage_cost(stage,
+        # batch_size, work)`` replaces measured stage durations with a
+        # deterministic model, and ``clock`` (a SimClock) is advanced by
+        # each tick's modeled latency — no wall-clock in the control path,
+        # so replays are bit-reproducible.  Both are plain mutable
+        # attributes so a scheduler can rewire them between episodes.
+        self.clock = clock
+        self.stage_cost = stage_cost
         # raw frames land here; pre-processing runs fused on device, so the
         # host-side per-tick work is a plain per-slot memcpy
         self._raw = np.zeros((capacity, *image_shape), np.float32)
@@ -146,6 +157,20 @@ class BatchedPerceptionEngine:
         self._free.append(st.slot)
         return st
 
+    def reset(self) -> None:
+        """Unseat every stream and clear all accounting, keeping the
+        compiled step (and its jit cache) warm — scenario replay reuses
+        one engine across episodes without paying recompilation, and a
+        reset engine behaves identically to a fresh one (slots are
+        re-carved on join; buffers of never-joined slots are masked out
+        of every post pass)."""
+        for sid in list(self.active):
+            self.leave(sid)
+        self._free = deque(range(self.capacity))
+        self.ticks = 0
+        self.tick_log.clear()
+        self.recorder = TimelineRecorder()
+
     # ---------------- stepping ----------------
     def compile(self) -> None:
         """Trace + compile the batched step so the first real tick is not
@@ -189,6 +214,14 @@ class BatchedPerceptionEngine:
                 for b in range(self.capacity):
                     self.built.post(jax.tree.map(lambda x: x[b], leaves))
         rec = timer.finish()
+        if self.stage_cost is not None:
+            # calibration sample of the *modeled* batched step at full
+            # capacity (the probe is offline: it never advances the clock)
+            rec.stages = {
+                "inference": self.stage_cost("inference", self.capacity, 0.0),
+                "post_processing": self.stage_cost(
+                    "post_processing", self.capacity, 0.0),
+            }
         rec.meta["batch_size"] = float(self.capacity)
         if saved is not None:
             self._raw[:] = saved
@@ -246,8 +279,23 @@ class BatchedPerceptionEngine:
 
         rec = timer.finish()
         n_served = len(served)
+        if self.stage_cost is not None:
+            # replace measured wall-clock stage times with the modeled
+            # per-(stage, batch-size, work) durations; post work is the
+            # tick's total proposal count (the paper's post-time driver)
+            work = float(sum(
+                getattr(out, "num_proposals", 0.0) or 0.0
+                for out in outputs.values()))
+            rec.stages = {
+                "read": self.stage_cost("read", n_served, 0.0),
+                "inference": self.stage_cost("inference", n_served, 0.0),
+                "post_processing": self.stage_cost(
+                    "post_processing", n_served, work),
+            }
         rec.meta["n_active"] = float(self.n_active)
         rec.meta["batch_size"] = float(n_served)
+        if self.clock is not None:
+            rec.meta["t_virtual"] = self.clock.advance(rec.end_to_end)
         lat = rec.end_to_end
 
         self.ticks += 1

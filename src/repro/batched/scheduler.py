@@ -21,7 +21,7 @@ spread (see ``RungCostModel``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Callable, Dict, Mapping, Optional
 
 import jax
 import numpy as np
@@ -29,6 +29,7 @@ import numpy as np
 from repro.anytime.controller import ContractController, ControllerConfig
 from repro.anytime.cost import LadderCostModel, SceneFeatures
 from repro.anytime.ladder import Ladder, frame_quality
+from repro.bus.clock import SimClock
 from repro.perception.data import Scene, SceneConfig, generate_scene
 from repro.perception.pipelines import build_pipeline
 
@@ -48,6 +49,7 @@ class ScheduledStream:
     prev_proposals: Optional[float] = None
     frames: int = 0
     misses: int = 0
+    drops: int = 0            # seated ticks with no frame (sensor dropout)
     qualities: list = dataclasses.field(default_factory=list)
     latencies: list = dataclasses.field(default_factory=list)
 
@@ -76,6 +78,8 @@ class RungBucketScheduler:
         capacity: int = 8,
         key: Optional[jax.Array] = None,
         ctl_cfg: ControllerConfig = ControllerConfig(),
+        clock: Optional[SimClock] = None,
+        stage_cost: Optional[Callable[[str, str, int, float], float]] = None,
     ) -> None:
         self.ladder = ladder
         self.capacity = capacity
@@ -94,6 +98,42 @@ class RungBucketScheduler:
         self.streams: Dict[str, ScheduledStream] = {}
         self._last_bucket_size: Dict[str, int] = {}
         self.ticks = 0
+        self.clock = None
+        self.stage_cost = None
+        self.set_virtual(clock, stage_cost)
+
+    def set_virtual(
+        self,
+        clock: Optional[SimClock],
+        stage_cost: Optional[Callable[[str, str, int, float], float]] = None,
+    ) -> None:
+        """(Re)wire virtual-time replay: every rung engine gets the shared
+        ``clock`` and a rung-bound view of ``stage_cost(rung, stage,
+        batch_size, work)``.  All engines share one clock, so a tick's
+        bucket steps advance virtual time sequentially — one accelerator,
+        exactly like the serial device in the scheduling simulator.  Pass
+        ``(None, None)`` to return to measured wall-clock timing."""
+        self.clock = clock
+        self.stage_cost = stage_cost
+        for rung_name, eng in self.engines.items():
+            eng.clock = clock
+            if stage_cost is None:
+                eng.stage_cost = None
+            else:
+                eng.stage_cost = (
+                    lambda stage, batch, work=0.0, _r=rung_name:
+                    stage_cost(_r, stage, batch, work))
+
+    def reset(self) -> None:
+        """Forget every stream, all accounting, and all learned cost state,
+        keeping the compiled engines warm — so one scheduler replays many
+        episodes with fresh-controller determinism but zero recompiles."""
+        self.streams.clear()
+        self._last_bucket_size.clear()
+        self.ticks = 0
+        self.cost = LadderCostModel(self.ladder)
+        for eng in self.engines.values():
+            eng.reset()
 
     def warm(self, probe_cfg: SceneConfig = SceneConfig()) -> None:
         """Compile every rung's batched step up front and seed the cost
@@ -158,6 +198,12 @@ class RungBucketScheduler:
         unknown = set(scenes) - set(self.streams)
         if unknown:
             raise KeyError(f"scenes for unknown streams: {sorted(unknown)}")
+
+        # dropout-aware: a seated stream with no frame this tick is a
+        # dropped sensor frame, not an error — count it, serve the rest
+        for sid, st in self.streams.items():
+            if sid not in scenes:
+                st.drops += 1
 
         # 1. every stream picks its rung for this tick
         buckets: Dict[str, list[str]] = {}
@@ -225,6 +271,7 @@ class RungBucketScheduler:
             rows.append({
                 "stream": sid,
                 "frames": st.frames,
+                "drops": st.drops,
                 "miss_rate": st.miss_rate,
                 "mean_quality": float(np.mean(st.qualities)) if st.qualities else float("nan"),
                 "p99_s": float(np.percentile(lats, 99)) if lats.size else float("nan"),

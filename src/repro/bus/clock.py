@@ -21,6 +21,12 @@ class SimClock:
     def time(self) -> float:
         return self._now
 
+    def __call__(self) -> float:
+        """Clock-callable alias, so a SimClock drops into any
+        ``clock: Callable[[], float]`` slot (e.g. ``StageTimer(clock=...)``)
+        in place of ``time.perf_counter``."""
+        return self._now
+
     def advance(self, dt: float) -> float:
         if dt < 0:
             raise ValueError(f"cannot advance the clock by {dt} s")

@@ -14,11 +14,18 @@ the variance *structure* (counts driving host-side work) is what matters.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterable, Iterator
 
 import numpy as np
 
-__all__ = ["SceneConfig", "Scene", "generate_scene", "scene_stream", "SCENARIOS"]
+__all__ = [
+    "SceneConfig",
+    "Scene",
+    "generate_scene",
+    "scene_stream",
+    "varied_scene_stream",
+    "SCENARIOS",
+]
 
 H, W = 96, 320
 
@@ -107,6 +114,21 @@ def generate_scene(cfg: SceneConfig, index: int = 0) -> Scene:
                  scenario=cfg.scenario, rain=cfg.rain_mm_per_hour)
 
 
-def scene_stream(cfg: SceneConfig, n: int) -> Iterator[Scene]:
-    for i in range(n):
+def scene_stream(cfg: SceneConfig, n: int, start: int = 0) -> Iterator[Scene]:
+    """``n`` scenes under one stationary config; ``start`` offsets the
+    frame index so consecutive calls continue one temporal stream."""
+    for i in range(start, start + n):
+        yield generate_scene(cfg, i)
+
+
+def varied_scene_stream(
+    configs: Iterable[tuple[SceneConfig, int]],
+) -> Iterator[Scene]:
+    """Segment-parameterized stream: each element is ``(config, index)``,
+    so conditions (scenario, rain, seed) may change frame to frame while
+    the index keeps per-frame content evolving.  This is how a
+    ``ScenarioTrace`` (``repro.scenarios``) renders a time-varying driving
+    episode through the same generator the stationary benchmarks use —
+    e.g. ``varied_scene_stream(trace.stream_configs("cam_front"))``."""
+    for cfg, i in configs:
         yield generate_scene(cfg, i)

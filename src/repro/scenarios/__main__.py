@@ -1,0 +1,12 @@
+"""CLI entry point: ``python -m repro.scenarios --check | --regen``.
+
+Thin alias for ``repro.scenarios.golden``'s main (running the submodule
+directly trips runpy's found-in-sys.modules warning because the package
+``__init__`` imports it).
+"""
+import sys
+
+from .golden import main
+
+if __name__ == "__main__":
+    sys.exit(main())

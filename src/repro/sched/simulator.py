@@ -104,11 +104,27 @@ class _Job:
         return self.stages[self.stage].resource
 
 
+# floor for sampled stage durations: a draw can go non-positive (negative
+# spec.mean, or a wide-variance / Gaussian-style scale_fn emitting negative
+# multipliers) and a negative duration would run the stage *backwards* —
+# done_at before release, corrupted SimResult timelines, and a vruntime
+# that rewards the corrupted task under CFS ordering.
+_MIN_STAGE_S = 1e-6
+
+
 def _draw(rng: np.random.Generator, spec: StageSpec, job: int) -> float:
     base = spec.mean * float(rng.lognormal(0.0, spec.jitter))
     if spec.scale_fn is not None:
-        base *= spec.scale_fn(job)
-    return max(base, 1e-6)
+        base *= float(spec.scale_fn(job))
+    if not math.isfinite(base):
+        # max() would silently propagate NaN (NaN comparisons are False),
+        # and a NaN remaining-time never reaches zero — the simulator
+        # would spin to its guard limit.  Fail loudly instead.
+        raise ValueError(
+            f"stage {spec.name!r}: sampled duration {base!r} for job {job} "
+            "is not finite (check scale_fn / jitter)"
+        )
+    return base if base >= _MIN_STAGE_S else _MIN_STAGE_S
 
 
 def simulate(tasks: list[TaskSpec], cfg: SimConfig = SimConfig()) -> SimResult:

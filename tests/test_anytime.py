@@ -453,3 +453,78 @@ def test_one_stage_detector_rejects_unsupported_cell():
 
     with pytest.raises(ValueError, match="cell must be"):
         OneStageDetector(cell=24)
+
+
+# -------------------------------------- per-(rung, batch-size) cost model --
+
+def _batched_record(latency_s):
+    """A batched-step StageRecord whose end-to-end is ``latency_s``."""
+    return StageRecord(stages={"inference": 0.7 * latency_s,
+                               "post_processing": 0.3 * latency_s})
+
+
+def _replay_rung():
+    from repro.scenarios import replay_ladder
+
+    return replay_ladder(["two_stage"])[0]
+
+
+def test_batched_cost_cold_prior_is_serial_bound():
+    """Before any batched observation, a batched prediction must be the
+    pessimistic serial bound (single-frame mean × batch size) — never an
+    assumed batching gain."""
+    from repro.anytime.cost import RungCostModel
+
+    m = RungCostModel(_replay_rung())
+    single = m.predict(SceneFeatures())
+    for b in (2.0, 4.0, 8.0):
+        p = m.predict(SceneFeatures(batch_size=b, batched=True))
+        assert p.mean == pytest.approx(single.mean * b)
+        assert p.std >= single.std
+
+
+def test_batched_cost_learns_affine_batch_latency():
+    """Seeded priors + synthetic affine observations: predictions converge
+    to the true per-(rung, batch-size) latency and p95 tails stay monotone
+    in batch size."""
+    from repro.anytime.cost import RungCostModel
+
+    true = lambda n: 2e-3 + 1e-3 * n          # fixed dispatch + per-slot work
+    m = RungCostModel(_replay_rung())
+    rng = np.random.default_rng(0)
+    cold_err = abs(m.predict(SceneFeatures(batch_size=4.0, batched=True)).mean
+                   - true(4))
+    for i in range(60):
+        n = 1 + (i % 8)
+        lat = true(n) * float(rng.lognormal(0.0, 0.03))
+        m.observe(_batched_record(lat), SceneFeatures(batch_size=float(n),
+                                                      batched=True))
+    assert m.batched_observations == 60
+    for n in (2.0, 5.0, 8.0):
+        p = m.predict(SceneFeatures(batch_size=n, batched=True))
+        assert p.mean == pytest.approx(true(n), rel=0.15)
+        assert abs(p.mean - true(n)) < cold_err
+    tails = [m.predict(SceneFeatures(batch_size=float(n), batched=True)).quantile(0.95)
+             for n in range(1, 9)]
+    assert all(b >= a for a, b in zip(tails, tails[1:]))
+    # the tail always clears the mean (the controller budgets against it)
+    means = [m.predict(SceneFeatures(batch_size=float(n), batched=True)).mean
+             for n in range(1, 9)]
+    assert all(t > mu for t, mu in zip(tails, means))
+
+
+def test_batched_observations_never_pollute_serial_stages():
+    """A shared padded step is not an observation of single-frame stage
+    behaviour: serial predictions must stay on the calibrated prior."""
+    from repro.anytime.cost import RungCostModel
+
+    rung = _replay_rung()
+    m = RungCostModel(rung)
+    before = m.predict(SceneFeatures())
+    for _ in range(20):
+        m.observe(_batched_record(0.5), SceneFeatures(batch_size=6.0,
+                                                      batched=True))
+    after = m.predict(SceneFeatures())
+    assert m.observations == 0
+    assert after.mean == pytest.approx(before.mean)
+    assert after.std == pytest.approx(before.std)

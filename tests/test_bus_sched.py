@@ -154,3 +154,43 @@ def test_simulator_deterministic():
     a = simulate([_pinet("OTHER", n=50)], SimConfig(cpu_cores=2, seed=7))
     b = simulate([_pinet("OTHER", n=50)], SimConfig(cpu_cores=2, seed=7))
     np.testing.assert_array_equal(a.latencies["pinet"], b.latencies["pinet"])
+
+
+# ------------------------------------------- stage-draw clamping (regression) --
+
+def test_draw_clamps_nonpositive_stage_times():
+    """A wide-variance / Gaussian-style scale_fn can emit negative
+    multipliers; sampled stage durations must clamp at the positive floor
+    instead of running a stage backwards."""
+    from repro.sched.simulator import _MIN_STAGE_S, _draw
+
+    rng = np.random.default_rng(0)
+    neg = StageSpec("post", "cpu", 0.001, jitter=0.0, scale_fn=lambda j: -5.0)
+    assert _draw(rng, neg, 0) == _MIN_STAGE_S
+    zero = StageSpec("post", "cpu", 0.0, jitter=0.5)
+    assert _draw(rng, zero, 0) == _MIN_STAGE_S
+    bad = StageSpec("post", "cpu", 0.001, jitter=0.0,
+                    scale_fn=lambda j: float("nan"))
+    with pytest.raises(ValueError, match="not finite"):
+        _draw(rng, bad, 0)
+
+
+def test_simulator_timelines_survive_negative_scale_draws():
+    """Regression: a wide-variance Gaussian scale stream used to be able
+    to corrupt SimResult timelines (negative durations → done_at before
+    release).  Every job must now finish with a finite, non-negative
+    latency."""
+    draws = np.random.default_rng(3).normal(1.0, 2.0, 200)   # ~30% negative
+    assert (draws < 0).any()
+    t = TaskSpec(
+        "gauss", 0.05,
+        (StageSpec("pre", "cpu", 0.002, 0.1),
+         StageSpec("infer", "accel", 0.005, 0.1),
+         StageSpec("post", "cpu", 0.004, 0.8, scale_fn=lambda j: draws[j])),
+        n_jobs=200,
+    )
+    res = simulate([t], SimConfig(cpu_cores=2, seed=1))
+    lats = res.latencies["gauss"]
+    assert lats.shape == (200,)
+    assert np.isfinite(lats).all()
+    assert (lats >= 0).all()

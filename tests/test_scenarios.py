@@ -1,0 +1,368 @@
+"""Scenario-trace subsystem: trace format round trips, seeded compiler
+invariants, deterministic replay through the batched stack, catalog
+episode behaviours, and the golden regression fixtures.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.anytime.runner import run_anytime, trace_budget_fn, trace_scene_fn
+from repro.perception.data import SCENARIOS, SceneConfig, varied_scene_stream
+from repro.scenarios import (
+    CATALOG,
+    Episode,
+    Phase,
+    ScenarioReplayer,
+    ScenarioTrace,
+    compare_reports,
+    compile_trace,
+    episode_names,
+    get_episode,
+    replay_ladder,
+)
+from repro.scenarios.golden import (
+    GOLDEN_CAPACITY,
+    GOLDEN_EPISODES,
+    GOLDEN_TICK_SCALE,
+    Tolerance,
+    golden_path,
+)
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+
+# ------------------------------------------------------------ trace format --
+
+def test_catalog_has_at_least_eight_episodes():
+    assert len(CATALOG) >= 8
+    assert set(GOLDEN_EPISODES) <= set(CATALOG)
+
+
+@pytest.mark.parametrize("name", episode_names())
+def test_catalog_compiles_and_json_round_trips(name):
+    trace = compile_trace(get_episode(name), seed=3)
+    assert trace.n_ticks == sum(s.n_ticks for s in trace.segments)
+    assert trace.max_concurrent_streams() >= len(trace.streams)
+    back = ScenarioTrace.from_json(trace.to_json())
+    assert back.to_dict() == trace.to_dict()
+    assert back.to_json() == trace.to_json()
+    # file round trip too
+    assert ScenarioTrace.from_json(trace.to_json(indent=2)).to_dict() == trace.to_dict()
+
+
+def test_compiler_is_seeded_and_structure_is_seed_independent():
+    ep = get_episode("rain_onset_clear")
+    a = compile_trace(ep, seed=1)
+    b = compile_trace(ep, seed=1)
+    c = compile_trace(ep, seed=2)
+    assert a.to_dict() == b.to_dict()           # same seed → identical trace
+    assert a.to_dict() != c.to_dict()           # seed changes sub-seeds
+    assert a.structure() == c.structure()       # …but never the structure
+
+
+def test_phase_split_yields_piecewise_linear_ramps():
+    ep = Episode("ramp", "d", ("s0",), phases=(
+        Phase("up", ticks=8, rain=(0.0, 80.0), split=2),
+    ))
+    tr = compile_trace(ep, seed=0)
+    assert [s.label for s in tr.segments] == ["up/0", "up/1"]
+    s0, s1 = tr.segments
+    # chunk boundaries continue the phase-level ramp
+    assert s0.rain[0] == pytest.approx(0.0)
+    assert s0.rain[1] == pytest.approx(40.0)
+    assert s1.rain[0] == pytest.approx(40.0)
+    assert s1.rain[1] == pytest.approx(80.0)
+    # per-tick interpolation hits the segment endpoints
+    assert s0.rain_at(0) == pytest.approx(0.0)
+    assert s0.rain_at(s0.n_ticks - 1) == pytest.approx(40.0)
+
+
+def test_tick_scale_changes_ticks_not_structure_labels():
+    ep = get_episode("urban_rush_hour")
+    full = compile_trace(ep, seed=5)
+    half = compile_trace(ep, seed=5, tick_scale=0.5)
+    assert [s.label for s in half.segments] == [s.label for s in full.segments]
+    assert half.n_ticks < full.n_ticks
+
+
+def test_budget_contention_rain_at_tick():
+    ep = Episode("prof", "d", ("s0",), budget_s=0.02, phases=(
+        Phase("a", ticks=4, budget_scale=(1.0, 0.5), contention=(1.0, 2.0)),
+        Phase("b", ticks=4, budget_scale=(0.5, 0.5), rain=(10.0, 10.0)),
+    ))
+    tr = compile_trace(ep, seed=0)
+    assert tr.budget_at_tick(0) == pytest.approx(0.02)
+    assert tr.budget_at_tick(3) == pytest.approx(0.01)
+    assert tr.contention_at_tick(3) == pytest.approx(2.0)
+    assert tr.rain_at_tick(5) == pytest.approx(10.0)
+    # past the end: final segment endpoint holds (run_anytime overshoot)
+    assert tr.budget_at_tick(1000) == pytest.approx(0.01)
+
+
+def test_trace_validation_rejects_bad_specs():
+    with pytest.raises(ValueError, match="scenario_mix"):
+        Phase("p", ticks=2, scenario_mix={})
+    with pytest.raises(ValueError, match="unknown scenarios"):
+        Phase("p", ticks=2, scenario_mix={"marsh": 1.0})
+    with pytest.raises(ValueError, match="probability"):
+        Phase("p", ticks=2, dropout={"*": 1.5})
+    with pytest.raises(ValueError, match="split"):
+        Phase("p", ticks=2, split=3)
+    with pytest.raises(ValueError, match="positive"):
+        Phase("p", ticks=2, contention=(0.0, 1.0))
+    ep = Episode("bad", "d", ("s0",), phases=(
+        Phase("a", ticks=2, leave=("ghost",)),))
+    with pytest.raises(ValueError, match="unseated"):
+        compile_trace(ep, seed=0)
+    ep2 = Episode("bad2", "d", ("s0",), phases=(
+        Phase("a", ticks=2, join=("s0",)),))
+    with pytest.raises(ValueError, match="already-seated"):
+        compile_trace(ep2, seed=0)
+    with pytest.raises(ValueError, match="tick_scale"):
+        compile_trace(get_episode("highway_cruise"), seed=0, tick_scale=0.0)
+
+
+def test_stream_configs_feed_varied_scene_stream():
+    """data.py satellite: a trace stream renders as a time-varying scene
+    stream whose conditions follow the segments."""
+    tr = compile_trace(get_episode("rain_onset_clear"), seed=4, tick_scale=0.5)
+    cfgs = list(tr.stream_configs("cam_front"))
+    assert len(cfgs) == tr.n_ticks
+    scenes = list(varied_scene_stream(cfgs))
+    assert len(scenes) == tr.n_ticks
+    rains = [s.rain for s in scenes]
+    assert rains[0] == pytest.approx(0.0)                # dry start
+    assert max(rains) == pytest.approx(150.0)            # downpour peak
+    assert all(sc.scenario in SCENARIOS for sc in scenes)
+    # deterministic: regenerating yields identical pixel content
+    again = list(varied_scene_stream(tr.stream_configs("cam_front")))
+    assert np.array_equal(scenes[5].image, again[5].image)
+
+
+# ----------------------------------------------------- hypothesis properties --
+# guarded import (not importorskip) so only these tests skip when the
+# container lacks hypothesis — the rest of the module must still run
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def episodes(draw):
+        n_phases = draw(st.integers(1, 3))
+        phases = []
+        scen = sorted(SCENARIOS)
+        for i in range(n_phases):
+            ticks = draw(st.integers(1, 6))
+            keys = draw(st.lists(st.sampled_from(scen), min_size=1,
+                                 max_size=3, unique=True))
+            mix = {k: draw(st.floats(0.1, 1.0, allow_nan=False)) for k in keys}
+            phases.append(Phase(
+                label=f"p{i}",
+                ticks=ticks,
+                split=draw(st.integers(1, min(2, ticks))),
+                scenario_mix=mix,
+                rain=(draw(st.floats(0, 200)), draw(st.floats(0, 200))),
+                dropout={"*": draw(st.floats(0, 0.9))},
+                contention=(draw(st.floats(0.5, 3)), draw(st.floats(0.5, 3))),
+                budget_scale=(draw(st.floats(0.5, 2)), draw(st.floats(0.5, 2))),
+            ))
+        return Episode(
+            name="prop", description="hypothesis episode",
+            streams=("s0", "s1"),
+            phases=tuple(phases),
+            budget_s=draw(st.floats(0.005, 0.05)),
+            period_s=draw(st.floats(0.05, 0.2)),
+        )
+
+    @given(episodes(), st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_compiled_trace_json_round_trip_exact(ep, seed):
+        tr = compile_trace(ep, seed=seed)
+        back = ScenarioTrace.from_json(tr.to_json())
+        assert back.to_dict() == tr.to_dict()
+        assert back.to_json() == tr.to_json()
+
+    @given(episodes(), st.integers(0, 2**30), st.integers(0, 2**30))
+    @settings(max_examples=25, deadline=None)
+    def test_compile_deterministic_and_structure_seed_free(ep, s1, s2):
+        assert compile_trace(ep, s1).to_dict() == compile_trace(ep, s1).to_dict()
+        assert compile_trace(ep, s1).structure() == compile_trace(ep, s2).structure()
+
+
+# ------------------------------------------------------------------ replay --
+
+@pytest.fixture(scope="module")
+def sched_pool():
+    """One compiled scheduler shared by every replay in this module (each
+    replay resets it to fresh-run state); XLA compilation is paid once."""
+    return {"sched": None}
+
+
+def _replay(trace, pool, **kw):
+    rep = ScenarioReplayer(trace, scheduler=pool["sched"],
+                           capacity=GOLDEN_CAPACITY, **kw)
+    pool["sched"] = rep.scheduler
+    return rep.run()
+
+
+def test_replay_is_byte_deterministic(sched_pool):
+    trace = compile_trace(get_episode("urban_rush_hour"), seed=7,
+                          tick_scale=0.5)
+    a = _replay(trace, sched_pool)
+    b = _replay(trace, sched_pool)
+    assert a.to_json() == b.to_json()
+    # and the virtual clock never ran backwards / stalled
+    assert a.clock_s >= trace.duration_s - 1e-9
+
+
+def test_replay_seed_changes_metrics_not_structure(sched_pool):
+    ep = get_episode("urban_rush_hour")
+    a = _replay(compile_trace(ep, seed=7, tick_scale=0.5), sched_pool)
+    b = _replay(compile_trace(ep, seed=8, tick_scale=0.5), sched_pool)
+    assert [s.label for s in a.segments] == [s.label for s in b.segments]
+    assert [s.ticks for s in a.segments] == [s.ticks for s in b.segments]
+    assert a.to_json() != b.to_json()
+
+
+@pytest.mark.parametrize("name", episode_names())
+def test_every_catalog_episode_replays_end_to_end(sched_pool, name):
+    trace = compile_trace(get_episode(name), seed=7, tick_scale=0.5)
+    report = _replay(trace, sched_pool)
+    assert report.episode == name
+    assert len(report.segments) == len(trace.segments)
+    tot = report.totals()
+    assert tot["frames"] > 0
+    assert sum(tot["rung_hist"].values()) == tot["frames"]
+    for seg in report.segments:
+        assert seg.ticks > 0
+        if seg.frames:
+            assert seg.p50_ms is not None and seg.p50_ms > 0
+            assert seg.p99_ms is not None and seg.p99_ms >= seg.p50_ms
+            assert seg.cv is not None and seg.cv >= 0
+    # engines never retraced across churn / bucket migration
+    for eng in sched_pool["sched"].engines.values():
+        assert eng.trace_count <= 1
+
+
+def test_tunnel_entry_drops_frames_and_starves_fusion(sched_pool):
+    trace = compile_trace(get_episode("tunnel_entry"), seed=7, tick_scale=0.5)
+    report = _replay(trace, sched_pool)
+    tunnel = next(s for s in report.segments if s.label == "tunnel")
+    clear = next(s for s in report.segments if s.label == "approach")
+    assert tunnel.drops > 0 and clear.drops == 0
+    assert tunnel.fusion["dropped"] + tunnel.fusion["stranded"] > 0
+    # dropout accounting also lands on the scheduler's per-stream rows
+    assert sum(r["drops"] for r in sched_pool["sched"].report()) == \
+        sum(s.drops for s in report.segments)
+
+
+def test_camera_churn_changes_stream_sets(sched_pool):
+    trace = compile_trace(get_episode("camera_churn"), seed=7, tick_scale=0.5)
+    report = _replay(trace, sched_pool)
+    two, four, three = report.segments
+    assert set(two.streams) == {"cam_front", "cam_left"}
+    assert set(four.streams) == {"cam_front", "cam_left", "cam_right", "cam_rear"}
+    assert set(three.streams) == {"cam_front", "cam_right", "cam_rear"}
+    assert all(st.frames > 0 for st in four.streams.values())
+
+
+def test_contention_spike_degrades_fidelity(sched_pool):
+    trace = compile_trace(get_episode("contention_spike"), seed=7,
+                          tick_scale=0.5)
+    report = _replay(trace, sched_pool)
+    ladder = [r.name for r in sched_pool["sched"].ladder]
+
+    def worst_rung(seg):
+        return max(ladder.index(r) for r in seg.rung_hist)
+
+    nominal = report.segments[0]
+    rest = [s for s in report.segments if s.label != "nominal"]
+    # the squeeze forces the fleet below its nominal fidelity floor —
+    # possibly a segment late, since controllers react to *observed*
+    # latencies — and the spike itself causes real deadline misses
+    assert max(worst_rung(s) for s in rest) > worst_rung(nominal)
+    assert sum(s.misses for s in report.segments
+               if s.label.startswith("spike")) > 0
+
+
+def test_latency_attack_ramp_causes_misses_then_degrade(sched_pool):
+    trace = compile_trace(get_episode("latency_attack_ramp"), seed=7,
+                          tick_scale=0.5)
+    report = _replay(trace, sched_pool)
+    benign = report.segments[0]
+    attack = [s for s in report.segments if s.label.startswith("attack")]
+    assert benign.misses == 0
+    assert sum(s.misses for s in attack) > 0
+    # by the end of the attack the controllers have degraded off the top rung
+    top = sched_pool["sched"].ladder.top.name
+    assert top not in attack[-1].rung_hist
+
+
+# ------------------------------------------------- anytime runner wiring --
+
+def test_run_anytime_accepts_trace_profiles():
+    trace = compile_trace(get_episode("contention_spike"), seed=3,
+                          tick_scale=0.5)
+    ladder = replay_ladder(["one_stage", "early_exit@0.5"])
+    cfg = SceneConfig(scenario="city", seed=3)
+    rep = run_anytime(
+        ladder, cfg, budget_s=trace.budget_s, n=trace.n_ticks,
+        budget_fn=trace_budget_fn(trace),
+        scene_fn=trace_scene_fn(trace, "cam_front"),
+    )
+    assert len(rep.frames) == trace.n_ticks
+    budgets = [f.budget_s for f in rep.frames]
+    # the spike squeezes budgets mid-run and releases them at the end
+    assert min(budgets) < budgets[0]
+    assert budgets[-1] == pytest.approx(trace.budget_at_tick(trace.n_ticks - 1))
+
+
+# ------------------------------------------------------------------ golden --
+
+def test_compare_reports_flags_drift_and_structure():
+    tol = Tolerance()
+    want = {"label": "a", "p50_ms": 10.0, "frames": 20,
+            "miss_rate": 0.1, "streams": {"s": {"frames": 5}}}
+    assert compare_reports(json.loads(json.dumps(want)), want, tol) == []
+    got = json.loads(json.dumps(want))
+    got["p50_ms"] = 10.0 * (1 + tol.rel) + tol.abs_ms + 1.0   # outside band
+    got["label"] = "b"                                        # structural
+    got["streams"]["s"]["frames"] = 5 + tol.count_abs + 4
+    problems = compare_reports(got, want, tol)
+    assert len(problems) == 3
+    assert any("label" in p for p in problems)
+    # within-band drift is fine
+    got2 = json.loads(json.dumps(want))
+    got2["p50_ms"] = 10.4
+    got2["frames"] = 21
+    assert compare_reports(got2, want, tol) == []
+    # missing keys are structural failures
+    got3 = json.loads(json.dumps(want))
+    del got3["frames"]
+    assert any("missing" in p for p in compare_reports(got3, want, tol))
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_EPISODES))
+def test_golden_episode_regression(sched_pool, regen_golden, name):
+    path = golden_path(GOLDEN_DIR, name)
+    # replay under the canonical golden configuration (same seed / tick
+    # scale / capacity the CI smoke step uses)
+    trace = compile_trace(get_episode(name), seed=GOLDEN_EPISODES[name],
+                          tick_scale=GOLDEN_TICK_SCALE)
+    report = _replay(trace, sched_pool)
+    if regen_golden or not path.exists():
+        if not regen_golden:
+            pytest.fail(f"golden fixture {path} is missing — run "
+                        f"`pytest --regen-golden` and commit the result")
+        path.parent.mkdir(parents=True, exist_ok=True)
+        report.save(path)
+        return
+    want = json.loads(path.read_text())
+    problems = compare_reports(report.to_dict(), want)
+    assert problems == [], "\n".join(problems)
