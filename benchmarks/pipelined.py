@@ -1,0 +1,164 @@
+"""Pipelined executor: depth sweep vs the synchronous engine.
+
+The claim under test (ISSUE 5 / ROADMAP "as fast as the hardware
+allows"): a depth-k software pipeline over the device-resident batch —
+frame *t+1*'s read + dirty-slot upload overlapping frame *t*'s fused
+device step overlapping frame *t−1*'s host post — serves more frames
+per second than the synchronous engine, which pays read, upload,
+compute, and post strictly in sequence.
+
+The measured loop is the full *serving* loop the scenario replayer and
+any camera harness actually run: per tick, acquire every stream's frame
+(the paper's §III read stage — here the synthetic-camera scene
+generator), then serve the batch.  Both arms run the identical loop;
+only the engine depth differs (depth 1 IS the synchronous PR 3 path).
+Blocks of ticks alternate round-robin across depths so machine-load
+drift lands on every arm equally; the reported figure per arm is its
+best block (hypervisor steal only ever inflates a block).
+
+Honest accounting of what to expect on a small host: the fused step for
+the top-fidelity rung saturates a 2-core CPU's memory bandwidth at 8
+streams, so overlap has little idle silicon to harvest there — the win
+is largest where the device step leaves the host genuinely idle
+(2–4 streams, or cheap rungs), and shrinks toward 1× as the step
+becomes the only cost.  The depth-2 arm must never be slower than
+depth-1 beyond noise (asserted, CI smoke).
+
+Also verified here: per-tick host→device traffic is *dirty slots only* —
+a capacity-8 engine serving 3 streams uploads 3 frames, not 8 (the PR 3
+engine re-uploaded the full padded batch every tick).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.batched import BatchedPerceptionEngine
+from repro.perception import SceneConfig, build_pipeline, generate_scene
+
+from .common import csv_line, table
+
+RUNG = "two_stage"              # the ladder's top rung (paper's dynamic-
+                                # shape pipeline) — the headline fidelity
+STREAM_COUNTS = (2, 4, 8)
+DEPTHS = (1, 2, 3)
+TICKS_PER_BLOCK = 10
+BLOCK_REPS = 4
+SMOKE_TOLERANCE = 0.90          # d2 fps >= 0.9 x d1 fps @8: non-flaky floor
+
+
+def _serve_block(eng, cfgs, n_ticks, tick0):
+    """One timed block of the serving loop: read (scene gen) + serve.
+    Returns (mean_wall_per_tick, per_tick_walls) with the pipeline
+    drained so no frame and no in-flight work leaks across blocks."""
+    n = len(cfgs)
+    ticks = []
+    t0 = time.perf_counter()
+    for t in range(n_ticks):
+        ta = time.perf_counter()
+        frames = {f"cam{s}": generate_scene(cfgs[s], tick0 + t).image
+                  for s in range(n)}
+        eng.tick(frames)
+        ticks.append(time.perf_counter() - ta)
+    eng.flush()                  # retire the tail of the pipe
+    wall = (time.perf_counter() - t0) / n_ticks
+    return wall, ticks
+
+
+def run() -> list[dict]:
+    rows = []
+    fps_at = {n: {} for n in STREAM_COUNTS}
+    for n in STREAM_COUNTS:
+        cfgs = [SceneConfig("city", seed=100 + s) for s in range(n)]
+        engines = {}
+        for d in DEPTHS:
+            built = build_pipeline(RUNG)
+            eng = BatchedPerceptionEngine(built, capacity=n, depth=d)
+            for s in range(n):
+                eng.join(f"cam{s}")
+            eng.compile()
+            _serve_block(eng, cfgs, 3, 0)          # warm (loop + caches)
+            engines[d] = eng
+
+        walls = {d: [] for d in DEPTHS}
+        tick_walls = {d: [] for d in DEPTHS}
+        for rep in range(BLOCK_REPS):
+            # round-robin so load drift lands on every depth equally
+            for d in DEPTHS:
+                wall, ticks = _serve_block(engines[d], cfgs, TICKS_PER_BLOCK,
+                                           1 + rep * TICKS_PER_BLOCK)
+                walls[d].append(wall)
+                tick_walls[d].extend(ticks)
+
+        for d in DEPTHS:
+            eng = engines[d]
+            best = min(walls[d])
+            fps = n / best
+            fps_at[n][d] = fps
+            recs = eng.recorder.records
+            host = np.asarray([r.end_to_end for r in recs])
+            h2d = np.asarray([r.meta.get("h2d_bytes", 0.0) for r in recs])
+            stale = max((r.meta.get("staleness_ticks", 0.0) for r in recs),
+                        default=0.0)
+            assert eng.trace_count == 1, \
+                f"step retraced at depth {d}: {eng.trace_count}"
+            rows.append({
+                "rung": RUNG,
+                "streams": n,
+                "depth": d,
+                "frames_per_s": fps,
+                "tick_wall_ms": best * 1e3,
+                "host_ms_per_tick": float(host.mean()) * 1e3,
+                "tick_p99_ms": float(np.percentile(
+                    np.asarray(tick_walls[d]), 99)) * 1e3,
+                "tick_cv": float(np.std(tick_walls[d]) /
+                                 np.mean(tick_walls[d])),
+                "h2d_kb_per_tick": float(h2d.mean()) / 1024.0,
+                "staleness": int(stale),
+            })
+            csv_line(f"pipelined/{RUNG}/streams{n}/depth{d}",
+                     best * 1e6,
+                     f"fps={fps:.0f},host_ms={host.mean()*1e3:.2f},"
+                     f"h2d_kb={h2d.mean()/1024.0:.0f},stale={int(stale)}")
+        for d in (2, 3):
+            spd = fps_at[n][d] / fps_at[n][1]
+            csv_line(f"pipelined/speedup@{n}/depth{d}", spd * 100,
+                     f"{spd:.2f}x_vs_sync")
+    table(rows, "pipelined executor: depth sweep vs synchronous engine")
+    for n in STREAM_COUNTS:
+        print(f"{n} streams: depth2 {fps_at[n][2]/fps_at[n][1]:.2f}x, "
+              f"depth3 {fps_at[n][3]/fps_at[n][1]:.2f}x sync frames/s")
+
+    # ---- dirty-slot H2D: partial occupancy uploads only what changed ----
+    built = build_pipeline(RUNG)
+    eng = BatchedPerceptionEngine(built, capacity=8, depth=2)
+    for s in range(3):
+        eng.join(f"cam{s}")
+    eng.compile()
+    cfgs = [SceneConfig("city", seed=100 + s) for s in range(3)]
+    for t in range(4):
+        eng.tick({f"cam{s}": generate_scene(cfgs[s], t).image
+                  for s in range(3)})
+    eng.flush()
+    frame_bytes = int(np.prod(eng.image_shape)) * 4
+    h2d = [r.meta["h2d_bytes"] for r in eng.recorder.records]
+    full_batch = 8 * frame_bytes
+    assert all(b == 3 * frame_bytes for b in h2d), \
+        f"expected dirty-only H2D (3 frames), got {h2d}"
+    print(f"capacity-8 engine, 3 live streams: {h2d[0]/1024:.0f} KB/tick "
+          f"uploaded (PR 3 full-batch rebuild: {full_batch/1024:.0f} KB)")
+    csv_line("pipelined/h2d_dirty_fraction",
+             h2d[0] / full_batch * 100,
+             f"dirty_kb={h2d[0]/1024:.0f},full_kb={full_batch/1024:.0f}")
+
+    # ---- CI smoke: the pipeline must never lose to sync beyond noise ----
+    d1, d2 = fps_at[max(STREAM_COUNTS)][1], fps_at[max(STREAM_COUNTS)][2]
+    assert d2 >= SMOKE_TOLERANCE * d1, (
+        f"depth-2 fps {d2:.0f} < {SMOKE_TOLERANCE} x depth-1 fps {d1:.0f} "
+        f"at {max(STREAM_COUNTS)} streams")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

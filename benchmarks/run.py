@@ -29,6 +29,7 @@ MODULES = [
     "static_fix",
     "anytime",
     "batched",
+    "pipelined",
     "scenarios",
     "roofline",
 ]
@@ -63,9 +64,25 @@ def main() -> int:
         }
 
     path = os.environ.get("BENCH_RESULTS_PATH", "BENCH_results.json")
+    # merge-update: BENCH_results.json is tracked as the perf trajectory,
+    # so a partial run (e.g. `benchmarks.run multi_tenant`) must refresh
+    # only the modules it ran instead of clobbering the rest of the file
+    merged: dict[str, dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f).get("benchmarks", {})
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(report)
+    # the file's failure list must describe the file (merged modules, some
+    # possibly from earlier runs), not just this invocation
+    file_failures = sorted(k for k, v in merged.items()
+                           if v.get("status") == "failed")
     with open(path, "w") as f:
-        json.dump({"benchmarks": report, "failures": failures}, f, indent=2)
-    print(f"\nwrote {path} ({sum(len(v['results']) for v in report.values())} records)")
+        json.dump({"benchmarks": merged, "failures": file_failures}, f, indent=2)
+    print(f"\nwrote {path} ({sum(len(v['results']) for v in report.values())} "
+          f"records from this run, {len(merged)} modules total)")
 
     if failures:
         print(f"\nFAILED benchmarks: {failures}")

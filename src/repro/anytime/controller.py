@@ -38,6 +38,14 @@ class ControllerConfig:
     quantile: float = 0.95        # tail the contract is written against
     upgrade_headroom: float = 1.25  # budget must cover tail × this to climb
     hold_frames: int = 3          # min frames between upward switches
+    # Pipelined serving (repro.batched.executor): the engine's pipeline
+    # depth.  A frame completes depth-1 ticks after submission, so the
+    # cost model scales batched tail estimates by this — throughput goes
+    # up under the pipeline, but the per-frame latency the deadline
+    # contract is written against is one tick stale per depth level.
+    # Stamped into SceneFeatures at select() when the caller leaves the
+    # feature at its default.
+    pipeline_depth: float = 1.0
 
     def __post_init__(self) -> None:
         if not 0.5 <= self.quantile < 1.0:
@@ -46,6 +54,8 @@ class ControllerConfig:
             raise ValueError("upgrade_headroom must be >= 1")
         if self.hold_frames < 0:
             raise ValueError("hold_frames must be >= 0")
+        if self.pipeline_depth < 1.0:
+            raise ValueError("pipeline_depth must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +90,9 @@ class ContractController:
 
     def select(self, budget_s: float, feats: SceneFeatures = SceneFeatures()) -> Selection:
         """Choose the rung for the next frame given its residual budget."""
+        if self.cfg.pipeline_depth > 1.0 and feats.pipeline_depth == 1.0:
+            feats = dataclasses.replace(
+                feats, pipeline_depth=self.cfg.pipeline_depth)
         q = self.cfg.quantile
         chosen: Optional[int] = None
         pred: Optional[Prediction] = None

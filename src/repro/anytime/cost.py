@@ -59,6 +59,18 @@ class SceneFeatures:
     ``proposals_prev`` these are pre-execution estimates — the
     rung-bucket scheduler feeds last tick's bucket size, relying on the
     same temporal coherence.
+
+    ``pipeline_depth`` is the pipelined-latency mode: the batched engine
+    at depth *d* overlaps upload/compute/post across ticks, so its
+    per-tick host cost is a *throughput* figure while a frame's
+    completion latency spans the whole pipe — a result drains ``d-1``
+    ticks after its scene was submitted.  Trained batched predictions
+    come from a regression on observed completion latencies
+    (``frame_latency_s`` on pipelined records) and need no rescaling;
+    before any batched observation exists, the cold-start prior scales
+    the serial bound by ``pipeline_depth`` so an untrained controller
+    never under-estimates pipe residence.  Depth 1 (the default, and the
+    synchronous engine) is unchanged.
     """
 
     proposals_prev: Optional[float] = None   # previous frame's proposal count
@@ -66,6 +78,7 @@ class SceneFeatures:
     scenario: str = "city"
     batch_size: float = 1.0                  # expected co-batch size (>= 1)
     batched: Optional[bool] = None           # force the batched cost route
+    pipeline_depth: float = 1.0              # executor pipeline depth (>= 1)
 
     @property
     def is_batched(self) -> bool:
@@ -135,9 +148,16 @@ class RungCostModel:
         the deployable mapping (prev-frame proposals → this post time).
         Batched-step records (``feats.is_batched``) train only the
         batch-size regression: a shared padded step is not an observation
-        of single-frame stage behaviour, whatever its bucket size."""
+        of single-frame stage behaviour, whatever its bucket size.
+
+        Pipelined records carry ``frame_latency_s`` (submit→drain
+        completion time) and the regression trains on THAT: their
+        ``end_to_end`` is only the overlapped host residual — near zero
+        exactly when the pipeline works best — and a model trained on it
+        would bless rungs whose completion latency busts the budget."""
         if feats.is_batched:
-            self._batch_step.observe(record.end_to_end, feats.batch_size)
+            lat = record.meta.get("frame_latency_s", record.end_to_end)
+            self._batch_step.observe(lat, feats.batch_size)
             self.batched_observations += 1
             return
         st = record.stages
@@ -174,13 +194,20 @@ class RungCostModel:
     def predict(self, feats: SceneFeatures) -> Prediction:
         if not feats.is_batched:
             return self._predict_single(feats)
-        single = self._predict_single(feats)
         if self.batched_observations == 0:
             # serial pessimistic prior: no batching gain assumed until the
-            # regression has seen a real batched step
-            mean = single.mean * feats.batch_size
-            return Prediction(mean, max(single.std * feats.batch_size,
+            # regression has seen a real batched step.  Pipelined, a frame
+            # additionally resides in the pipe for ~depth ticks, so the
+            # unobserved completion-latency prior scales with depth.
+            depth = max(feats.pipeline_depth, 1.0)
+            single = self._predict_single(feats)
+            mean = single.mean * feats.batch_size * depth
+            return Prediction(mean, max(single.std * feats.batch_size * depth,
                                         self.prior_cv * mean))
+        # trained: the regression already learned completion latency
+        # (frame_latency_s on pipelined records, tick e2e on sync ones),
+        # so no depth rescaling — multiplying observed completions by
+        # depth again would double-count pipe residence
         p = self._batch_step.predict(feats.batch_size)
         floor = self.prior_cv * max(p.mean, 0.0)
         return Prediction(p.mean, max(p.std, floor))

@@ -1,21 +1,31 @@
 """Batched multi-camera perception serving.
 
+``executor``  — ``PipelinedExecutor``: depth-k software pipeline over a
+                device-resident padded batch (dirty-slot-only H2D, async
+                fused step, single-readback drain) exploiting JAX async
+                dispatch so upload, compute, and host post-processing
+                overlap across consecutive ticks.
 ``engine``    — ``BatchedPerceptionEngine``: N camera streams share one
                 fixed-capacity padded device batch (fused device
                 pre-processing + vmapped inference, one batched readback,
                 vectorized post) with slot carve-out so join/leave never
-                retraces.
+                retraces.  ``depth=1`` is synchronous; ``depth>=2``
+                pipelines ticks (results one tick stale at depth 2).
 ``scheduler`` — ``RungBucketScheduler``: per-stream anytime controllers
                 bucket streams by chosen rung each tick; the shared cost
                 model learns per-(rung, batch-size) latency so deadline
-                decisions account for batching delay.
+                decisions account for batching delay (and, pipelined,
+                for pipeline depth).
 """
 from .engine import BatchedPerceptionEngine, BatchedStreamState
+from .executor import Drained, PipelinedExecutor
 from .scheduler import RungBucketScheduler, ScheduledStream, TickResult
 
 __all__ = [
     "BatchedPerceptionEngine",
     "BatchedStreamState",
+    "Drained",
+    "PipelinedExecutor",
     "RungBucketScheduler",
     "ScheduledStream",
     "TickResult",

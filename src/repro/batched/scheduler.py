@@ -80,10 +80,17 @@ class RungBucketScheduler:
         ctl_cfg: ControllerConfig = ControllerConfig(),
         clock: Optional[SimClock] = None,
         stage_cost: Optional[Callable[[str, str, int, float], float]] = None,
+        depth: int = 1,
     ) -> None:
+        if depth > 1 and stage_cost is not None:
+            raise ValueError(
+                "stage_cost (virtual-time replay) requires depth=1: replay "
+                "determinism is defined on the synchronous engine path"
+            )
         self.ladder = ladder
         self.capacity = capacity
         self.ctl_cfg = ctl_cfg
+        self.depth = depth
         # one cost model shared by every stream: latency is a property of
         # the shared accelerator, not of any one camera
         self.cost = LadderCostModel(ladder)
@@ -94,7 +101,7 @@ class RungBucketScheduler:
             built = build_pipeline(rung.pipeline, scale=rung.scale,
                                    key=key, pad=False)
             self.engines[rung.name] = BatchedPerceptionEngine(
-                built, capacity=capacity)
+                built, capacity=capacity, depth=depth)
         self.streams: Dict[str, ScheduledStream] = {}
         self._last_bucket_size: Dict[str, int] = {}
         self.ticks = 0
@@ -113,6 +120,9 @@ class RungBucketScheduler:
         bucket steps advance virtual time sequentially — one accelerator,
         exactly like the serial device in the scheduling simulator.  Pass
         ``(None, None)`` to return to measured wall-clock timing."""
+        if stage_cost is not None and self.depth > 1:
+            raise ValueError(
+                "stage_cost (virtual-time replay) requires depth=1 engines")
         self.clock = clock
         self.stage_cost = stage_cost
         for rung_name, eng in self.engines.items():
@@ -148,9 +158,18 @@ class RungBucketScheduler:
                   for i in range(self.capacity)]
         for rung_name, eng in self.engines.items():
             rec = eng.probe(frames)
+            if self.depth > 1:
+                # a probe is a blocking synchronous step; seeding the
+                # completion-latency regression with it verbatim would
+                # flip the model off the depth-aware prior and
+                # under-estimate pipe residence until live pipelined
+                # observations accumulate.  Seed measured step cost x
+                # residence instead.
+                rec.meta["frame_latency_s"] = rec.end_to_end * self.depth
             self.cost.observe(
                 rung_name, rec,
-                SceneFeatures(batch_size=float(self.capacity), batched=True))
+                SceneFeatures(batch_size=float(self.capacity), batched=True,
+                              pipeline_depth=float(self.depth)))
 
     # ---------------- stream membership ----------------
     def add_stream(self, stream_id: str, budget_s: float) -> ScheduledStream:
@@ -186,6 +205,9 @@ class RungBucketScheduler:
             # always the batched cost route: even a singleton bucket pays
             # a full capacity-wide padded step
             batched=True,
+            # pipelined engines complete a frame depth-1 ticks after its
+            # submission; the cost model scales tails accordingly
+            pipeline_depth=float(self.depth),
         )
 
     def tick(self, scenes: Mapping[str, Scene],
@@ -194,6 +216,15 @@ class RungBucketScheduler:
 
         ``budgets`` overrides per-stream residual budgets for this tick
         (contention injection, as in ``run_anytime``'s ``budget_fn``).
+
+        With pipelined engines (``depth >= 2``) a tick's results belong
+        to the frames submitted ``depth-1`` ticks earlier; each
+        submission carries its scenes and budgets as an echoed payload,
+        so quality and deadline accounting always pair a result with the
+        scene that produced it.  Buckets whose engine is still filling
+        contribute no rows this tick; engines whose bucket emptied (all
+        members migrated away) are flushed so no frame is lost in the
+        pipe.
         """
         unknown = set(scenes) - set(self.streams)
         if unknown:
@@ -226,41 +257,80 @@ class RungBucketScheduler:
             for sid in members:
                 if sid not in eng.active:
                     eng.join(sid)
-            record, outs = eng.tick(
-                {sid: scenes[sid].image for sid in members})
-            lat = record.end_to_end
-            latencies[rung_name] = lat
-            outputs.update(outs)
+            payload = {
+                sid: (scenes[sid],
+                      budgets[sid] if budgets is not None else
+                      self.streams[sid].budget_s)
+                for sid in members}
+            record, outs, echoed = eng.tick(
+                {sid: scenes[sid].image for sid in members},
+                payload=payload)
+            self._last_bucket_size[rung_name] = len(members)
+            if record is not None:
+                self._account_drain(rung_name, record, outs, echoed,
+                                    latencies, outputs, rows)
 
-            # 3. one cost observation per bucket: batched-step latency at
-            # this (rung, batch-size)
-            b = len(members)
-            self.cost.observe(
-                rung_name, record,
-                SceneFeatures(batch_size=float(b), batched=True))
-            self._last_bucket_size[rung_name] = b
-
-            # 4. per-stream accounting: every bucket member experienced the
-            # shared step latency
-            for sid in members:
-                st = self.streams[sid]
-                budget = budgets[sid] if budgets is not None else st.budget_s
-                out = outs[sid]
-                q = frame_quality(scenes[sid], out)
-                miss = lat > budget
-                st.frames += 1
-                st.misses += int(miss)
-                st.latencies.append(lat)
-                if q is not None:
-                    st.qualities.append(q)
-                st.prev_proposals = out.num_proposals
-                rows.append({
-                    "stream": sid, "rung": rung_name, "batch_size": b,
-                    "budget_s": budget, "latency_s": lat, "miss": miss,
-                    "quality": q,
-                })
+        # 3. retire in-flight work of engines that got no submissions
+        # this tick (their streams all migrated, dropped, or left)
+        for rung_name, eng in self.engines.items():
+            if rung_name not in buckets and eng.in_flight:
+                for record, outs, echoed in eng.flush():
+                    self._account_drain(rung_name, record, outs, echoed,
+                                        latencies, outputs, rows)
         self.ticks += 1
         return TickResult(buckets=buckets, latencies=latencies,
+                          outputs=outputs, rows=rows)
+
+    def _account_drain(self, rung_name, record, outs, echoed,
+                       latencies, outputs, rows) -> None:
+        """Account one drained engine tick: a cost-model observation at
+        its (rung, batch-size), then per-stream quality/miss rows paired
+        against the scenes and budgets echoed from its submission."""
+        lat = record.end_to_end
+        # the deadline contract is judged on frame completion latency:
+        # for sync ticks that IS the tick latency; for pipelined ticks it
+        # spans the frame's whole residence in the pipe
+        lat_frame = record.meta.get("frame_latency_s", lat)
+        latencies[rung_name] = lat
+        outputs.update(outs)
+        b = int(record.meta["batch_size"])
+        self.cost.observe(
+            rung_name, record,
+            SceneFeatures(batch_size=float(b), batched=True,
+                          pipeline_depth=float(self.depth)))
+        for sid, (scene, budget) in echoed.items():
+            st = self.streams.get(sid)
+            if st is None:
+                continue               # stream left while its frame flew
+            out = outs[sid]
+            q = frame_quality(scene, out)
+            miss = lat_frame > budget
+            st.frames += 1
+            st.misses += int(miss)
+            st.latencies.append(lat_frame)
+            if q is not None:
+                st.qualities.append(q)
+            st.prev_proposals = out.num_proposals
+            rows.append({
+                "stream": sid, "rung": rung_name, "batch_size": b,
+                "budget_s": budget, "latency_s": lat_frame, "miss": miss,
+                "quality": q,
+                "staleness": int(record.meta.get("staleness_ticks", 0.0)),
+            })
+
+    def flush(self) -> TickResult:
+        """Drain every engine's in-flight pipelined work (end of run).
+        Returns a ``TickResult`` (empty buckets — nothing was submitted)
+        so the retired frames' detections, latencies, and accounting rows
+        are all recoverable, exactly as during a regular tick."""
+        latencies: Dict[str, float] = {}
+        outputs: Dict[str, object] = {}
+        rows: list[dict] = []
+        for rung_name, eng in self.engines.items():
+            for record, outs, echoed in eng.flush():
+                self._account_drain(rung_name, record, outs, echoed,
+                                    latencies, outputs, rows)
+        return TickResult(buckets={}, latencies=latencies,
                           outputs=outputs, rows=rows)
 
     # ---------------- reporting ----------------

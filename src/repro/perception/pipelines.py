@@ -127,13 +127,19 @@ class BuiltPipeline:
     """A pipeline variant ready to run: a jitted device stage and a host
     post stage.  The runner owns the timing; this owns the compute.
 
+    **Single-readback contract**: ``post`` and ``post_batch`` receive the
+    device outputs *already fetched to host* — the runner (or the batched
+    engine's drain) performs exactly ONE ``jax.device_get`` of the whole
+    output tree per frame/tick, and the post stages operate on NumPy
+    arrays.  (Historically each post re-read leaves one by one with
+    ``np.asarray`` and paid double copies like ``np.asarray(boxes)[k]``.)
+
     ``post_batch`` is the vectorized form of ``post`` for the batched
-    multi-camera engine (``repro.batched``): it takes the batched device
-    outputs plus an active-slot mask, performs ONE fixed-shape readback
-    for the whole batch, and returns a per-slot ``FrameOutput`` list
-    (``None`` for inactive slots).  Factories that cannot vectorize their
-    post stage leave it ``None``; the engine falls back to slicing the
-    batch through ``post`` per slot."""
+    multi-camera engine (``repro.batched``): it takes the fetched batch
+    outputs plus an active-slot mask and returns a per-slot
+    ``FrameOutput`` list (``None`` for inactive slots).  Factories that
+    cannot vectorize their post stage leave it ``None``; the engine falls
+    back to slicing the batch through ``post`` per slot."""
 
     name: str
     scale: float
@@ -195,18 +201,15 @@ def _make_one_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) ->
     params = det.init(key if key is not None else _default_key())
     infer = jax.jit(lambda img: det.infer(params, img))
 
-    def post(dev) -> FrameOutput:
-        boxes, _, keep = dev
-        # static shapes: host only reads back a FIXED-size buffer
-        k = np.asarray(keep)
-        b = _unscale(np.asarray(boxes)[k], scale, pad)
-        return FrameOutput(boxes=b, num_objects=float(k.sum()),
+    def post(host) -> FrameOutput:
+        boxes, _, keep = host                 # NumPy after the one readback
+        b = _unscale(boxes[keep], scale, pad)
+        return FrameOutput(boxes=b, num_objects=float(keep.sum()),
                            num_proposals=float(det.top_k))
 
-    def post_batch(dev, active: np.ndarray) -> list:
-        boxes, _, keep = dev
-        kb = np.asarray(keep)                 # (B, k) — one batched readback
-        bb = _unscale(np.asarray(boxes), scale, pad)
+    def post_batch(host, active: np.ndarray) -> list:
+        boxes, _, kb = host                   # (B, k) keep mask, NumPy
+        bb = _unscale(boxes, scale, pad)
         outs: list[Optional[FrameOutput]] = []
         for b in range(kb.shape[0]):
             if not active[b]:
@@ -237,17 +240,16 @@ def _make_two_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) ->
     params = det.init(key if key is not None else _default_key())
     infer = jax.jit(lambda img: det.infer_device(params, img))
 
-    def post(dev) -> FrameOutput:
-        feat, obj = dev
-        boxes, n_prop = det.post_host(params, np.asarray(feat), np.asarray(obj))
+    def post(host) -> FrameOutput:
+        feat, obj = host                      # NumPy after the one readback
+        boxes, n_prop = det.post_host(params, feat, obj)
         return FrameOutput(boxes=_unscale(np.asarray(boxes), scale, pad),
                            num_objects=float(len(boxes)),
                            num_proposals=float(n_prop))
 
-    def post_batch(dev, active: np.ndarray) -> list:
-        feat, obj = dev
-        per_slot = det.post_host_batch(
-            params, np.asarray(feat), np.asarray(obj), active=active)
+    def post_batch(host, active: np.ndarray) -> list:
+        feat, obj = host
+        per_slot = det.post_host_batch(params, feat, obj, active=active)
         outs: list[Optional[FrameOutput]] = []
         for slot in per_slot:
             if slot is None:
@@ -272,8 +274,8 @@ def _make_lane(scale: float = 1.0, key=None, pad: bool = True, **det_kw) -> Buil
     params = det.init(key if key is not None else _default_key())
     infer = jax.jit(lambda img: det.infer_device(params, img))
 
-    def post(dev) -> FrameOutput:
-        fits, n_pix = det.cluster_host(np.asarray(dev))
+    def post(host) -> FrameOutput:
+        fits, n_pix = det.cluster_host(host)  # NumPy after the one readback
         return FrameOutput(boxes=_NO_BOXES, num_objects=float(len(fits)),
                            num_proposals=float(n_pix))
 
@@ -293,11 +295,10 @@ def _make_lane_static(scale: float = 1.0, key=None, pad: bool = True, **det_kw) 
 
     infer = jax.jit(full)
 
-    def post(dev) -> FrameOutput:
-        fits, n_pix = dev
-        f = np.asarray(fits)            # fixed-size readback only
-        return FrameOutput(boxes=_NO_BOXES, num_objects=float(f.shape[0]),
-                           num_proposals=float(np.asarray(n_pix)))
+    def post(host) -> FrameOutput:
+        fits, n_pix = host              # fixed-size, NumPy after readback
+        return FrameOutput(boxes=_NO_BOXES, num_objects=float(fits.shape[0]),
+                           num_proposals=float(n_pix))
 
     return BuiltPipeline("lane_static", scale, infer, post, pad=pad)
 
@@ -315,7 +316,9 @@ def run_frame(built: BuiltPipeline, scene: Scene):
         dev = built.infer(jnp.asarray(img))
         jax.block_until_ready(dev)
     with timer.stage("post_processing"):
-        out = built.post(dev)
+        # ONE readback of the whole output tree, then host-side post —
+        # no per-leaf np.asarray walks, no double copies
+        out = built.post(jax.device_get(dev))
     timer.note("num_objects", out.num_objects)
     timer.note("num_proposals", out.num_proposals)
     return timer.finish(), out

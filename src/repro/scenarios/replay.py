@@ -264,6 +264,14 @@ class ScenarioReplayer:
     engines, so a suite of episodes pays XLA compilation once.  A reused
     scheduler must have been built on the same ladder and enough capacity
     for this trace's peak stream count.
+
+    ``depth`` is the pipelined-executor wiring: replay always **falls
+    back to the synchronous depth-1 path** regardless of the requested
+    depth, because byte-reproducible reports are defined on sync ticks —
+    a modeled ``SimClock`` cannot observe real dispatch overlap, and the
+    golden fixtures are contracts on the sync engine.  The requested
+    value is kept on ``.requested_depth`` so a wall-clock harness (e.g.
+    ``benchmarks.pipelined``) can drive the same trace pipelined.
     """
 
     def __init__(
@@ -276,7 +284,12 @@ class ScenarioReplayer:
         key=None,
         fusion_queue: int = 4,
         jitter: float = 0.06,
+        depth: int = 1,
     ) -> None:
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1 (got {depth})")
+        self.requested_depth = depth
+        self.depth = 1                 # sync fallback: see class docstring
         self.trace = trace
         need = trace.max_concurrent_streams()
         self.clock = SimClock()
@@ -290,7 +303,7 @@ class ScenarioReplayer:
             self.cost = ModeledStageCost(ladder, seed=trace.seed, jitter=jitter)
             scheduler = RungBucketScheduler(
                 ladder, capacity=cap, key=key, ctl_cfg=ctl_cfg,
-                clock=self.clock, stage_cost=self.cost)
+                clock=self.clock, stage_cost=self.cost, depth=self.depth)
         else:
             # a reused scheduler brings its own ladder/controller config/
             # PRNG key — accepting overrides here would silently produce a
@@ -308,6 +321,10 @@ class ScenarioReplayer:
                 raise ValueError(
                     f"reused scheduler capacity {scheduler.capacity} < peak "
                     f"stream count {need} of trace {trace.name!r}")
+            if scheduler.depth != 1:
+                raise ValueError(
+                    "reused scheduler must be depth-1: replay determinism "
+                    "is defined on the synchronous engine path")
             self.cost = ModeledStageCost(scheduler.ladder, seed=trace.seed,
                                          jitter=jitter)
             scheduler.reset()
