@@ -1,0 +1,18 @@
+"""Timing-hazard analysis: static lint (tvlint) + runtime trace sentinel.
+
+``python -m repro.analysis src/repro --baseline analysis/baseline.json``
+runs the static pass and fails on any hazard not in the committed
+baseline; :class:`TraceSentinel` bounds actual recompiles and host
+transfers at runtime.  See the README section "Timing-hazard lint".
+"""
+from .baseline import diff_baseline, load_baseline, write_baseline
+from .findings import AXES, RULES, Finding, Rule
+from .lint import lint_file, lint_paths, lint_source, report_dict
+from .sentinel import SentinelReport, TimingHazardError, TraceSentinel
+
+__all__ = [
+    "AXES", "RULES", "Rule", "Finding",
+    "lint_source", "lint_file", "lint_paths", "report_dict",
+    "load_baseline", "write_baseline", "diff_baseline",
+    "TraceSentinel", "SentinelReport", "TimingHazardError",
+]

@@ -1,0 +1,114 @@
+"""Rule catalog and finding records for the timing-hazard analyzer.
+
+Each rule is keyed to one of the source paper's six variation axes
+(data, I/O, model, runtime, hardware, end-to-end perception system): the
+static patterns below are the *code-level root causes* of the inference
+time variation the paper measures — a silent XLA retrace is a runtime
+outlier, an implicit host sync is an I/O stall, unseeded randomness is
+data-path nondeterminism, and so on.
+
+A ``Finding`` carries a formatting-stable ``key`` (path + scope + rule +
+a hash of the offending statement's AST, which ``ast.dump`` renders
+without line/column info) so the committed baseline survives
+whitespace-only and comment-only edits but breaks — loudly — when the
+hazardous code itself changes or a new hazard appears.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["AXES", "Rule", "RULES", "Finding"]
+
+# the paper's six perspectives on inference-time variation
+AXES = ("data", "io", "model", "runtime", "hardware", "end_to_end")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    axis: str
+    title: str
+    hint: str
+
+
+RULES: dict[str, Rule] = {
+    r.code: r
+    for r in [
+        Rule(
+            "TV001",
+            "io",
+            "implicit host sync in a hot path",
+            "fetch the whole output tree ONCE per tick with jax.device_get "
+            "outside the loop, then post-process host arrays; never "
+            "np.asarray/float()/.item() a traced value per iteration",
+        ),
+        Rule(
+            "TV002",
+            "runtime",
+            "retrace hazard",
+            "hoist jax.jit out of per-tick code, keep traced shapes/dtypes "
+            "static (pad + mask instead of reshaping), and never branch in "
+            "Python on a traced value — use jnp.where/lax.cond",
+        ),
+        Rule(
+            "TV003",
+            "data",
+            "unseeded or time-dependent randomness",
+            "thread an explicit seed: np.random.default_rng(seed) / "
+            "jax.random.PRNGKey(seed); wall-clock-derived seeds break "
+            "scenario-replay determinism and the golden fixtures",
+        ),
+        Rule(
+            "TV004",
+            "hardware",
+            "buffer-donation misuse",
+            "donate_argnums on a buffer with pending producers/consumers "
+            "blocks PJRT dispatch for the full previous step; reserve "
+            "donation for churn-frequency carve-outs, never the tick path, "
+            "and never read a donated buffer after the call",
+        ),
+        Rule(
+            "TV005",
+            "model",
+            "unjitted device computation invoked per tick",
+            "wrap the callable in jax.jit (once, at setup) so per-tick "
+            "invocations replay a compiled executable instead of "
+            "dispatching op-by-op",
+        ),
+        Rule(
+            "TV006",
+            "end_to_end",
+            "unfenced timing measurement around async dispatch",
+            "call jax.block_until_ready(outputs) before closing the timed "
+            "interval — otherwise the measurement records dispatch, not "
+            "execution (see core.timing.StageTimer)",
+        ),
+    ]
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One hazard occurrence.  ``key`` is the baseline identity; ``line``
+    and ``col`` are presentation only (they move under formatting)."""
+
+    rule: str
+    axis: str
+    path: str          # root-relative posix path
+    line: int
+    col: int
+    scope: str         # dotted scope within the module ("<module>" at top)
+    message: str
+    hint: str
+    key: str
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        sup = "  [suppressed]" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.axis}] {self.message}{sup}\n"
+                f"    scope: {self.scope}\n"
+                f"    fix:   {self.hint}")

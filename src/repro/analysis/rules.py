@@ -1,0 +1,615 @@
+"""AST rules for ``tvlint`` — static detection of the code patterns that
+produce DNN inference-time variation.
+
+The analyzer is deliberately *module-local and heuristic*: it resolves
+import aliases, tracks which local names hold traced/device values and
+which hold jitted callables, and flags hazardous uses in **hot
+contexts** (syntactic loops — ``for``/``while``/comprehensions — and
+functions whose names mark them as per-tick entry points).  It does not
+chase values across modules; cross-module invariants are the runtime
+``TraceSentinel``'s job.  False positives are expected to be rare and
+are silenced either with an inline ``# tvlint: disable=TVxxx`` comment
+(for *intentional* patterns, with the reason in the comment) or by the
+committed baseline (for accepted debt).
+
+Rules (axis in brackets):
+
+* **TV001 [io]** — host sync on a traced value inside a loop:
+  ``np.asarray``/``np.array``/``float()``/``int()``/``.item()``/
+  ``.tolist()`` applied to a device value, or ``jax.device_get`` inside
+  a per-iteration loop body.  ``jax.block_until_ready`` is a *fence*,
+  not a hazard.
+* **TV002 [runtime]** — retrace hazards: ``jax.jit`` called inside a
+  loop or per-tick function (a fresh closure compiles every call),
+  ``jax.jit`` of a lambda closing over an enclosing loop variable, and
+  Python ``if``/``while``/``assert``/ternary branching on a traced
+  value.
+* **TV003 [data]** — nondeterministic randomness: legacy global-state
+  ``np.random.*`` calls, ``np.random.default_rng()`` with no seed,
+  stdlib ``random.*`` draws, and wall-clock time feeding a seed or key.
+* **TV004 [hardware]** — donation misuse: invoking a
+  ``donate_argnums``-jitted callable inside a loop or per-tick function
+  (donation fences pending events and blocks PJRT dispatch), or reading
+  a donated buffer after the donating call.
+* **TV005 [model]** — a module-local function that performs device math
+  (``jnp.``/``jax.lax.``/``jax.nn.``) invoked in a hot context without
+  ever being jitted: per-tick op-by-op dispatch.
+* **TV006 [end_to_end]** — a ``time.perf_counter()``/``time.time()``
+  interval closed after calling a jitted callable with no
+  ``block_until_ready``/``device_get`` fence in between: the number
+  measures async dispatch, not execution.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import re
+from typing import Optional
+
+from .findings import RULES, Finding
+
+__all__ = ["HOT_FUNCTION_RE", "analyze_module"]
+
+# function names treated as per-tick entry points even outside loops
+HOT_FUNCTION_RE = re.compile(
+    r"(^|_)(tick|step|submit|drain|serve|decode)(_|$)|^run_frame$"
+)
+
+_DEVICE_NS = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.random.")
+_DEVICE_ATTR_CALLS = {"infer", "infer_device", "apply", "static_fit_device"}
+_SYNC_CALLS = {"numpy.asarray", "numpy.array", "numpy.ascontiguousarray",
+               "float", "int", "bool"}
+_SYNC_METHODS = {"item", "tolist"}
+_FENCE_CALLS = {"jax.block_until_ready", "jax.device_get"}
+_CLOCK_CALLS = {"time.perf_counter", "time.time", "time.monotonic",
+                "time.time_ns"}
+_JIT_WRAPPERS = {"jax.jit", "jax.pmap", "jax.vmap", "jax.pjit"}
+_GLOBAL_NP_RANDOM = {
+    "seed", "random", "rand", "randn", "randint", "random_sample", "ranf",
+    "sample", "normal", "uniform", "choice", "shuffle", "permutation",
+    "poisson", "exponential", "lognormal", "beta", "gamma", "binomial",
+    "standard_normal",
+}
+_STDLIB_RANDOM = {
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "expovariate", "seed",
+}
+_SEEDED_SINKS = {"numpy.random.default_rng", "jax.random.PRNGKey",
+                 "jax.random.key", "numpy.random.seed", "random.seed"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "itemsize"}
+
+
+def _dotted(node: ast.AST, aliases: dict[str, str]) -> Optional[str]:
+    """Resolve an attribute chain to a canonical dotted name, mapping the
+    leading identifier through the module's import aliases."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(aliases.get(node.id, node.id))
+        return ".".join(reversed(parts))
+    return None
+
+
+def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _fingerprint(stmt: ast.stmt) -> str:
+    """Formatting-stable statement identity: ``ast.dump`` carries no
+    line/column attributes, so blank lines and comments cannot move it."""
+    return hashlib.sha1(ast.dump(stmt).encode()).hexdigest()[:12]
+
+
+class _ModuleFacts(ast.NodeVisitor):
+    """Prepass: jitted names, donating names, jnp-using local functions,
+    and names that are handed to jit/vmap (and therefore *are* compiled
+    even though their def site looks plain)."""
+
+    def __init__(self, aliases: dict[str, str]) -> None:
+        self.aliases = aliases
+        self.jitted_names: set[str] = set()       # plain names = jit(...)
+        self.jitted_attrs: set[str] = set()       # self.<attr> = jit(...)
+        self.donating_names: dict[str, tuple[int, ...]] = {}
+        self.donating_attrs: dict[str, tuple[int, ...]] = {}
+        self.device_fn_defs: set[str] = set()     # local defs doing jnp math
+        self.jit_wrapped_args: set[str] = set()   # names passed to jit/vmap
+
+    def _jit_call(self, call: ast.Call) -> bool:
+        d = _dotted(call.func, self.aliases)
+        return d in _JIT_WRAPPERS
+
+    @staticmethod
+    def _donated(call: ast.Call) -> tuple[int, ...]:
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    return (v.value,)
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    out = tuple(e.value for e in v.elts
+                                if isinstance(e, ast.Constant)
+                                and isinstance(e.value, int))
+                    return out or (0,)
+                return (0,)          # dynamic spec: assume arg 0
+        return ()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if isinstance(node.value, ast.Call) and self._jit_call(node.value):
+            donated = self._donated(node.value)
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.jitted_names.add(t.id)
+                    if donated:
+                        self.donating_names[t.id] = donated
+                elif isinstance(t, ast.Attribute):
+                    self.jitted_attrs.add(t.attr)
+                    if donated:
+                        self.donating_attrs[t.attr] = donated
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._jit_call(node):
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    self.jit_wrapped_args.add(a.id)
+        self.generic_visit(node)
+
+    def _visit_def(self, node) -> None:
+        for dec in node.decorator_list:
+            d = _dotted(dec.func if isinstance(dec, ast.Call) else dec,
+                        self.aliases)
+            if d in _JIT_WRAPPERS:
+                self.jitted_names.add(node.name)
+            if isinstance(dec, ast.Call) and d and d.endswith("partial"):
+                if any(_dotted(a, self.aliases) in _JIT_WRAPPERS
+                       for a in dec.args):
+                    self.jitted_names.add(node.name)
+        does_device_math = False
+        host_level = False
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Attribute, ast.Name)):
+                d = _dotted(sub, self.aliases)
+                if d and d.startswith(_DEVICE_NS):
+                    does_device_math = True
+                elif d in _FENCE_CALLS or d in _CLOCK_CALLS:
+                    # a function that fences/reads back or takes wall-clock
+                    # timestamps is host-level orchestration: it cannot be
+                    # wrapped in jax.jit wholesale, so TV005 does not apply
+                    host_level = True
+        if does_device_math and not host_level:
+            self.device_fn_defs.add(node.name)
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+
+class _Analyzer(ast.NodeVisitor):
+    """Main pass: emits findings with formatting-stable keys."""
+
+    def __init__(self, path: str, facts: _ModuleFacts) -> None:
+        self.path = path
+        self.facts = facts
+        self.aliases = facts.aliases
+        self.findings: list[Finding] = []
+        self._scope: list[str] = []
+        self._loop_depth = 0
+        self._jit_ctx = 0
+        self._loop_vars: set[str] = set()
+        self._device_vars: list[set[str]] = [set()]
+        self._stmt_stack: list[ast.stmt] = []
+        self._fn_stack: list[str] = []
+        self._key_counts: dict[str, int] = {}
+
+    # ------------------------------------------------ bookkeeping -----
+    @property
+    def scope(self) -> str:
+        return ".".join(self._scope) if self._scope else "<module>"
+
+    def _hot(self) -> bool:
+        if self._loop_depth:
+            return True
+        return any(HOT_FUNCTION_RE.search(s) for s in self._scope)
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        stmt = self._stmt_stack[-1] if self._stmt_stack else node
+        base = (f"{self.path}::{self.scope}::{rule}::{_fingerprint(stmt)}")
+        n = self._key_counts.get(base, 0)
+        self._key_counts[base] = n + 1
+        key = base if n == 0 else f"{base}#{n}"
+        r = RULES[rule]
+        self.findings.append(Finding(
+            rule=rule, axis=r.axis, path=self.path,
+            line=getattr(node, "lineno", 0), col=getattr(node, "col_offset", 0),
+            scope=self.scope, message=message, hint=r.hint, key=key))
+
+    # ------------------------------------------------ device tracking -
+    def _is_device_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self._device_vars[-1]
+        if isinstance(node, ast.Attribute):
+            # x.shape / x.ndim / x.dtype are static Python metadata even
+            # when x is traced — branching on them is shape-polymorphic
+            # dispatch, not a host sync
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self._is_device_expr(node.value)
+        if isinstance(node, (ast.Subscript, ast.Starred)):
+            return self._is_device_expr(node.value)
+        if isinstance(node, ast.BinOp):
+            return (self._is_device_expr(node.left)
+                    or self._is_device_expr(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self._is_device_expr(node.operand)
+        if isinstance(node, ast.Compare):
+            return (self._is_device_expr(node.left)
+                    or any(self._is_device_expr(c) for c in node.comparators))
+        if isinstance(node, ast.Call):
+            return self._is_device_call(node)
+        return False
+
+    def _is_device_call(self, call: ast.Call) -> bool:
+        d = _dotted(call.func, self.aliases)
+        if d:
+            if d == "jax.device_put":
+                return True
+            if d.startswith(_DEVICE_NS):
+                return True
+            root = d.split(".")[0]
+            if root in self.facts.jitted_names or d in self.facts.jitted_names:
+                return True
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr in self.facts.jitted_attrs:
+                return True
+            if call.func.attr in _DEVICE_ATTR_CALLS:
+                return True
+        if isinstance(call.func, ast.Name):
+            if call.func.id in self.facts.jitted_names:
+                return True
+        return False
+
+    def _mark_targets(self, target: ast.AST, device: bool) -> None:
+        if isinstance(target, ast.Name):
+            if device:
+                self._device_vars[-1].add(target.id)
+            else:
+                self._device_vars[-1].discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._mark_targets(e, device)
+        elif isinstance(target, ast.Starred):
+            self._mark_targets(target.value, device)
+
+    # ------------------------------------------------ scope plumbing --
+    def _enter_function(self, node) -> None:
+        self._scope.append(node.name)
+        devs: set[str] = set()
+        for arg in list(node.args.args) + list(node.args.kwonlyargs):
+            ann = getattr(arg, "annotation", None)
+            if ann is not None:
+                d = _dotted(ann, self.aliases)
+                if d in ("jax.Array", "jax.numpy.ndarray", "jnp.ndarray"):
+                    devs.add(arg.arg)
+        self._device_vars.append(devs)
+        self._fn_stack.append(node.name)
+        jitted_def = node.name in self.facts.jitted_names
+        if jitted_def:
+            self._jit_ctx += 1
+        outer_loops, self._loop_depth = self._loop_depth, 0
+        self._scan_tv006(node)
+        self.generic_visit(node)
+        self._loop_depth = outer_loops
+        if jitted_def:
+            self._jit_ctx -= 1
+        self._fn_stack.pop()
+        self._device_vars.pop()
+        self._scope.pop()
+
+    visit_FunctionDef = _enter_function
+    visit_AsyncFunctionDef = _enter_function
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    def generic_visit(self, node: ast.AST) -> None:
+        is_stmt = isinstance(node, ast.stmt)
+        if is_stmt:
+            self._stmt_stack.append(node)
+        super().generic_visit(node)
+        if is_stmt:
+            self._stmt_stack.pop()
+
+    # ------------------------------------------------ loops -----------
+    def _enter_loop(self, node) -> None:
+        if isinstance(node, ast.For):
+            names: set[str] = set()
+            self._collect_names(node.target, names)
+            added = names - self._loop_vars
+            self._loop_vars |= added
+        else:
+            added = set()
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+        self._loop_vars -= added
+
+    @staticmethod
+    def _collect_names(node: ast.AST, out: set[str]) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name):
+                out.add(sub.id)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._enter_loop(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._is_device_expr(node.test):
+            self._emit("TV002", node.test,
+                       "Python while-condition on a traced value forces a "
+                       "blocking host sync (or a tracer error) every "
+                       "iteration")
+        self._enter_loop(node)
+
+    def _enter_comp(self, node) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_ListComp = _enter_comp
+    visit_SetComp = _enter_comp
+    visit_DictComp = _enter_comp
+    visit_GeneratorExp = _enter_comp
+
+    # ------------------------------------------------ branches --------
+    def visit_If(self, node: ast.If) -> None:
+        if self._is_device_expr(node.test):
+            self._emit("TV002", node.test,
+                       "Python branch on a traced value: a host sync per "
+                       "evaluation outside jit, a TracerBoolConversionError "
+                       "inside — use jnp.where or lax.cond")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        if self._is_device_expr(node.test):
+            self._emit("TV002", node.test,
+                       "ternary on a traced value — use jnp.where")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if self._is_device_expr(node.test):
+            self._emit("TV002", node.test,
+                       "assert on a traced value forces a host sync")
+        self.generic_visit(node)
+
+    # ------------------------------------------------ assignments -----
+    def visit_Assign(self, node: ast.Assign) -> None:
+        device = self._is_device_expr(node.value)
+        self.generic_visit(node)
+        for t in node.targets:
+            self._mark_targets(t, device)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self._is_device_expr(node.value):
+            self._mark_targets(node.target, True)
+
+    # ------------------------------------------------ calls -----------
+    def visit_Call(self, node: ast.Call) -> None:
+        d = _dotted(node.func, self.aliases)
+        self._check_tv001(node, d)
+        self._check_tv002_jit(node, d)
+        self._check_tv003(node, d)
+        self._check_tv004(node, d)
+        self._check_tv005(node, d)
+        if d in _JIT_WRAPPERS:
+            # arguments of jit/vmap compile into the traced program:
+            # device math and "unjitted" calls inside are exactly right
+            self._jit_ctx += 1
+            self.generic_visit(node)
+            self._jit_ctx -= 1
+        else:
+            self.generic_visit(node)
+
+    def _check_tv001(self, node: ast.Call, d: Optional[str]) -> None:
+        if self._jit_ctx or not self._loop_depth:
+            return
+        if d == "jax.device_get":
+            self._emit("TV001", node,
+                       "jax.device_get inside a loop: one readback per "
+                       "iteration instead of one per tick")
+            return
+        if d in _SYNC_CALLS and node.args \
+                and self._is_device_expr(node.args[0]):
+            self._emit("TV001", node,
+                       f"{d.replace('numpy', 'np')}() on a traced value "
+                       "inside a loop blocks on the device per iteration")
+            return
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS \
+                and self._is_device_expr(node.func.value):
+            self._emit("TV001", node,
+                       f".{node.func.attr}() on a traced value inside a "
+                       "loop blocks on the device per iteration")
+
+    def _check_tv002_jit(self, node: ast.Call, d: Optional[str]) -> None:
+        if d not in _JIT_WRAPPERS:
+            return
+        if self._loop_depth or (self._hot() and self._scope):
+            self._emit("TV002", node,
+                       f"{d} called in a per-tick context: every call "
+                       "builds a fresh closure and retraces/compiles")
+        for a in node.args:
+            if isinstance(a, ast.Lambda):
+                free: set[str] = set()
+                self._collect_names(a.body, free)
+                bound = {x.arg for x in a.args.args}
+                leaked = (free - bound) & self._loop_vars
+                if leaked:
+                    self._emit(
+                        "TV002", a,
+                        "jit of a lambda closing over loop variable(s) "
+                        f"{sorted(leaked)}: the closure changes every "
+                        "iteration, defeating the compile cache")
+
+    def _check_tv003(self, node: ast.Call, d: Optional[str]) -> None:
+        if d is None:
+            return
+        if d.startswith("numpy.random."):
+            leaf = d.rsplit(".", 1)[1]
+            if leaf in _GLOBAL_NP_RANDOM:
+                self._emit("TV003", node,
+                           f"global-state np.random.{leaf}: unseeded, "
+                           "process-wide, replay-hostile — use "
+                           "np.random.default_rng(seed)")
+                return
+            if leaf == "default_rng" and not node.args and not node.keywords:
+                self._emit("TV003", node,
+                           "np.random.default_rng() with no seed draws OS "
+                           "entropy: two runs diverge")
+                return
+        if d.startswith("random.") and d.rsplit(".", 1)[1] in _STDLIB_RANDOM:
+            self._emit("TV003", node,
+                       f"stdlib {d}: global-state RNG — use a seeded "
+                       "np.random.default_rng")
+            return
+        if d in _SEEDED_SINKS:
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                for sub in ast.walk(a):
+                    if isinstance(sub, ast.Call) \
+                            and _dotted(sub.func, self.aliases) \
+                            in _CLOCK_CALLS:
+                        self._emit("TV003", sub,
+                                   "wall-clock time feeding a seed/key: "
+                                   "every run randomizes differently")
+                        break
+
+    def _check_tv004(self, node: ast.Call, d: Optional[str]) -> None:
+        donated: tuple[int, ...] = ()
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in self.facts.donating_names:
+            donated = self.facts.donating_names[node.func.id]
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in self.facts.donating_attrs:
+            donated = self.facts.donating_attrs[node.func.attr]
+        if not donated:
+            return
+        if self._loop_depth or self._hot():
+            self._emit("TV004", node,
+                       "donating jitted callable invoked in a per-tick "
+                       "context: donation fences the buffer's pending "
+                       "events and blocks PJRT dispatch")
+
+    def _check_tv005(self, node: ast.Call, d: Optional[str]) -> None:
+        if self._jit_ctx or not self._hot():
+            return
+        if not isinstance(node.func, ast.Name):
+            return
+        name = node.func.id
+        if name not in self.facts.device_fn_defs:
+            return
+        if name in self.facts.jitted_names \
+                or name in self.facts.jit_wrapped_args:
+            return
+        # definitional code: a device-math helper called from inside
+        # another device-math function is traced under the caller's jit
+        if self._fn_stack and self._fn_stack[-1] in self.facts.device_fn_defs:
+            return
+        # factory pattern: the result is handed to jax.jit elsewhere
+        # (step_fn = make_step(...); jax.jit(step_fn, ...))
+        stmt = self._stmt_stack[-1] if self._stmt_stack else None
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) \
+                        and t.id in self.facts.jit_wrapped_args:
+                    return
+        self._emit("TV005", node,
+                   f"{name}() performs device math but is never jitted: "
+                   "per-tick calls dispatch op-by-op")
+
+    # ------------------------------------------------ TV006 -----------
+    def _scan_tv006(self, fn) -> None:
+        """Linear scan of a function body in source order: a clock anchor
+        ``t = time.perf_counter()`` closed by ``... - t`` after a jitted
+        call with no fence in between measures dispatch, not execution."""
+        stmts: list[ast.stmt] = []
+
+        def flatten(body) -> None:
+            for s in body:
+                stmts.append(s)
+                for field in ("body", "orelse", "finalbody"):
+                    sub = getattr(s, field, None)
+                    if sub and not isinstance(
+                            s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                        flatten(sub)
+                for h in getattr(s, "handlers", []) or []:
+                    flatten(h.body)
+
+        flatten(fn.body)
+        anchors: dict[str, dict] = {}
+        for s in stmts:
+            closes: list[tuple[str, ast.BinOp]] = []
+            for sub in ast.walk(s):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Sub) \
+                        and isinstance(sub.right, ast.Name) \
+                        and sub.right.id in anchors:
+                    left_ok = (
+                        isinstance(sub.left, ast.Call)
+                        and _dotted(sub.left.func, self.aliases)
+                        in _CLOCK_CALLS
+                    ) or (isinstance(sub.left, ast.Name)
+                          and sub.left.id in anchors)
+                    if left_ok:
+                        closes.append((sub.right.id, sub))
+            for name, binop in closes:
+                st = anchors.pop(name, None)
+                if st is None:
+                    continue
+                if st["jitted"] and not st["fenced"]:
+                    self._emit("TV006", binop,
+                               f"interval '{name}' closes after a jitted "
+                               "call with no block_until_ready fence: this "
+                               "measures async dispatch, not execution")
+            for sub in ast.walk(s):
+                if not isinstance(sub, ast.Call):
+                    continue
+                d = _dotted(sub.func, self.aliases)
+                if d in _FENCE_CALLS:
+                    for st in anchors.values():
+                        st["fenced"] = True
+                elif self._is_device_call(sub) or (
+                        isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr in self.facts.jitted_attrs):
+                    for st in anchors.values():
+                        st["jitted"] = True
+                        st["fenced"] = False
+            if isinstance(s, ast.Assign) and isinstance(s.value, ast.Call) \
+                    and _dotted(s.value.func, self.aliases) in _CLOCK_CALLS:
+                for t in s.targets:
+                    if isinstance(t, ast.Name):
+                        anchors[t.id] = {"jitted": False, "fenced": False}
+
+
+def analyze_module(source: str, path: str) -> list[Finding]:
+    """Run every rule over one module's source.  ``path`` is the
+    root-relative posix path used in finding keys."""
+    tree = ast.parse(source, filename=path)
+    facts = _ModuleFacts(_collect_aliases(tree))
+    facts.visit(tree)
+    analyzer = _Analyzer(path, facts)
+    analyzer.visit(tree)
+    analyzer.findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return analyzer.findings

@@ -1,0 +1,180 @@
+"""Runtime trace sentinel: count *actual* compilations and guard host
+transfers over a region of execution.
+
+Static lint catches hazards it can see in source; the sentinel catches
+the ones it can't (cross-module shape drift, cache-key churn from weak
+types, a stray numpy argument reaching a jitted program).  It replaces
+ad-hoc ``trace_count == 1`` assertions with one shared facility:
+
+    with TraceSentinel(compile_budget=0) as sent:
+        for _ in range(ticks):
+            engine.tick(frames)
+    sent.report()          # -> SentinelReport
+    sent.check()           # raises TimingHazardError over budget
+
+Mechanism: ``jax.monitoring`` fires a
+``/jax/core/compile/backend_compile_duration`` duration event once per
+*real* backend compile (cache hits fire nothing), and a
+``.../jaxpr_trace_duration`` event per trace.  There is no unregister
+API, so one module-level listener accumulates global counters and each
+sentinel instance snapshots them on entry and diffs on exit.  Host
+transfers are guarded with ``jax.transfer_guard``: under ``"disallow"``
+any implicit device↔host transfer inside the region raises at the
+offending call site — the loudest possible file:line for a TV001 bug.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+
+__all__ = ["TraceSentinel", "SentinelReport", "TimingHazardError"]
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+
+_lock = threading.Lock()
+_counters = {"compiles": 0, "traces": 0}
+_installed = False
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    if event == _COMPILE_EVENT:
+        with _lock:
+            _counters["compiles"] += 1
+    elif event == _TRACE_EVENT:
+        with _lock:
+            _counters["traces"] += 1
+
+
+def _install() -> None:
+    global _installed
+    with _lock:
+        if _installed:
+            return
+        _installed = True
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+
+
+class TimingHazardError(AssertionError):
+    """A sentinel budget was exceeded.  Subclasses AssertionError so the
+    legacy ``assert trace_count == 1`` call sites upgrade transparently."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelReport:
+    compiles: int
+    traces: int
+    compile_budget: int
+    trace_budget: int | None
+    transfer_guard: str
+
+    @property
+    def ok(self) -> bool:
+        if self.compiles > self.compile_budget:
+            return False
+        if self.trace_budget is not None and self.traces > self.trace_budget:
+            return False
+        return True
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {"ok": self.ok}
+
+    def render(self) -> str:
+        status = "ok" if self.ok else "OVER BUDGET"
+        tb = "-" if self.trace_budget is None else self.trace_budget
+        return (f"TraceSentinel[{status}] compiles={self.compiles}/"
+                f"{self.compile_budget} traces={self.traces}/{tb} "
+                f"transfer_guard={self.transfer_guard}")
+
+
+class TraceSentinel:
+    """Context manager bounding recompiles and host transfers in a region.
+
+    Parameters
+    ----------
+    compile_budget:
+        Maximum *backend compiles* allowed inside the region.  The steady
+        state after warmup is 0: enter the sentinel only after
+        ``engine.compile()`` / ``scheduler.warm()``.
+    trace_budget:
+        Optional cap on jaxpr traces.  Tracing is cheaper than compiling
+        and some wrappers re-trace without recompiling, so the default is
+        unbounded; set it to pin down retrace churn specifically.
+    transfer_guard:
+        ``jax.transfer_guard`` level for the region — ``"disallow"``
+        (default) raises on any implicit transfer, ``"log"`` prints,
+        ``"allow"`` disables guarding.
+    strict:
+        When true (default), ``__exit__`` raises :class:`TimingHazardError`
+        if a budget was exceeded.  When false, call :meth:`check` or
+        inspect :meth:`report` manually.
+    """
+
+    def __init__(
+        self,
+        compile_budget: int = 0,
+        trace_budget: int | None = None,
+        transfer_guard: str = "disallow",
+        strict: bool = True,
+    ) -> None:
+        self.compile_budget = int(compile_budget)
+        self.trace_budget = (None if trace_budget is None
+                             else int(trace_budget))
+        self.transfer_guard = transfer_guard
+        self.strict = strict
+        self._start: dict[str, int] | None = None
+        self._end: dict[str, int] | None = None
+        self._guard_cm: contextlib.AbstractContextManager | None = None
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "TraceSentinel":
+        _install()
+        with _lock:
+            self._start = dict(_counters)
+        self._end = None
+        if self.transfer_guard != "allow":
+            self._guard_cm = jax.transfer_guard(self.transfer_guard)
+            self._guard_cm.__enter__()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self._guard_cm is not None:
+            self._guard_cm.__exit__(exc_type, exc, tb)
+            self._guard_cm = None
+        with _lock:
+            self._end = dict(_counters)
+        if exc_type is None and self.strict:
+            self.check()
+        return False
+
+    # ------------------------------------------------------------------
+    def _delta(self) -> tuple[int, int]:
+        if self._start is None:
+            return 0, 0
+        end = self._end
+        if end is None:
+            with _lock:
+                end = dict(_counters)
+        return (end["compiles"] - self._start["compiles"],
+                end["traces"] - self._start["traces"])
+
+    def report(self) -> SentinelReport:
+        compiles, traces = self._delta()
+        return SentinelReport(
+            compiles=compiles, traces=traces,
+            compile_budget=self.compile_budget,
+            trace_budget=self.trace_budget,
+            transfer_guard=self.transfer_guard)
+
+    def check(self) -> SentinelReport:
+        rep = self.report()
+        if not rep.ok:
+            raise TimingHazardError(
+                f"{rep.render()} — unexpected compilation/trace inside a "
+                "sentinel-guarded region (TV002: retrace hazard). Warm up "
+                "before entering the sentinel, or raise the budget if the "
+                "region legitimately compiles.")
+        return rep

@@ -171,7 +171,11 @@ class PipelinedExecutor:
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
         f = self._zero() if frame is None else self._checked(frame)
-        self._raw = self._slot_update(self._raw, slot, f)
+        # slot index as a device int32 (matching warmup's aval) so the
+        # carve-out is also clean under jax.transfer_guard("disallow")
+        self._raw = self._slot_update(
+            self._raw, jax.device_put(np.int32(slot)),
+            jax.device_put(f) if isinstance(f, np.ndarray) else f)
 
     def reset(self) -> None:
         """Drop all in-flight work and blank the resident batch."""
@@ -185,11 +189,15 @@ class PipelinedExecutor:
         inventory, so a new fast path added here cannot be forgotten by
         callers' warmups.  Resident slot contents are untouched."""
         zeros = jnp.zeros((self.capacity, *self.image_shape), jnp.float32)
-        raw = self._assemble(zeros, np.zeros(self.capacity, bool),
+        raw = self._assemble(zeros,
+                             jax.device_put(np.zeros(self.capacity, bool)),
                              *[self._zero()] * self.capacity)
         self._pack(*[self._zero()] * self.capacity)
         jax.block_until_ready(self._step(raw))
-        self._slot_update(zeros, 0, self._zero())   # donates the throwaway
+        # same avals as set_slot's call (device int32 slot), so the carve
+        #-out path warms exactly the executable set_slot will replay
+        self._slot_update(zeros, jax.device_put(np.int32(0)),
+                          self._zero())             # donates the throwaway
 
     def run_direct(self, frames=None):
         """One blocking fused step *outside* the pipeline (calibration
@@ -237,12 +245,18 @@ class PipelinedExecutor:
         if n_dirty == self.capacity:
             self._raw = self._pack(*frames)
         elif n_dirty:
-            self._raw = self._assemble(self._raw, dirty, *frames)
+            # the mask crosses explicitly too: under the sentinel's
+            # jax.transfer_guard("disallow") an implicit numpy→device
+            # argument is an error, and the tick path must stay guard-clean
+            self._raw = self._assemble(
+                self._raw, jax.device_put(dirty), *frames)
         dev = self._step(self._raw)
         seq = self._seq
         self._seq += 1
         self._queue.append(_InFlight(
             dev=dev, payload=payload, seq=seq, submitted_at=self._seq,
+            # tvlint: disable=TV006 (dispatch_s deliberately measures async
+            # enqueue cost, not execution; drain() fences before latency_s)
             h2d_bytes=h2d, dispatch_s=time.perf_counter() - t0,
             t_submit=t0))
         return seq

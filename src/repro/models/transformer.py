@@ -275,6 +275,8 @@ class Model:
             if cfg.remat:
                 body = jax.checkpoint(body)
             x, auxs = jax.lax.scan(body, x, params["layers"], unroll=_u(cfg))
+            # tvlint: disable=TV002 (auxs is a dict pytree; the branch tests
+            # dict emptiness, a static property, not a traced value)
             aux = _tree_mean(auxs) if auxs else {}
 
         elif cfg.family == "ssm":

@@ -235,6 +235,20 @@ class TwoStageDetector:
     channels: int = 16
     proposal_thr: float = 0.55
     refine_flops: int = 24           # per-proposal host work (feature dot)
+    # host copy of params["refine"], keyed on the device buffer's identity:
+    # without it every post_host call pays a device→host readback of the
+    # refinement head (a per-frame TV001 hazard tvlint flags in loops)
+    _refine_src: object = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _refine_host: object = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def _refine(self, params) -> np.ndarray:
+        dev = params["refine"]
+        if self._refine_src is not dev:
+            self._refine_src = dev
+            self._refine_host = np.asarray(dev)
+        return self._refine_host
 
     def specs(self) -> dict:
         c = self.channels
@@ -268,7 +282,7 @@ class TwoStageDetector:
         (the paper's Fig. 5/11 mechanism). Returns (boxes, n_proposals)."""
         ys, xs = np.nonzero(obj > self.proposal_thr)       # variable length!
         n = len(ys)
-        refine = np.asarray(params["refine"])
+        refine = self._refine(params)
         boxes = np.zeros((n, 4), np.float32)
         scores = np.zeros((n,), np.float32)
         for i in range(n):                                  # per-proposal work
@@ -313,7 +327,7 @@ class TwoStageDetector:
             active = np.ones(B, bool)
         masked = np.where(active[:, None, None], obj, -np.inf)
         bidx, ys, xs = np.nonzero(masked > self.proposal_thr)
-        refine = np.asarray(params["refine"])
+        refine = self._refine(params)
         f = feat[bidx, ys, xs]                          # (N, C)
         for _ in range(8):
             f = np.tanh(f + 0.1 * (f @ refine[:, :1]) * refine[:, 0])

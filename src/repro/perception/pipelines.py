@@ -243,7 +243,8 @@ def _make_two_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) ->
     def post(host) -> FrameOutput:
         feat, obj = host                      # NumPy after the one readback
         boxes, n_prop = det.post_host(params, feat, obj)
-        return FrameOutput(boxes=_unscale(np.asarray(boxes), scale, pad),
+        # boxes are already NumPy (post_host is host-side): no re-wrap
+        return FrameOutput(boxes=_unscale(boxes, scale, pad),
                            num_objects=float(len(boxes)),
                            num_proposals=float(n_prop))
 
@@ -257,7 +258,7 @@ def _make_two_stage(scale: float = 1.0, key=None, pad: bool = True, **det_kw) ->
                 continue
             boxes, n_prop = slot
             outs.append(FrameOutput(
-                boxes=_unscale(np.asarray(boxes), scale, pad),
+                boxes=_unscale(boxes, scale, pad),
                 num_objects=float(len(boxes)), num_proposals=float(n_prop)))
         return outs
 

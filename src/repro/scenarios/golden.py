@@ -150,12 +150,16 @@ def compare_reports(got: dict, want: dict, tol: Tolerance = Tolerance()) -> list
     return problems
 
 
-def golden_replay(name: str, scheduler=None, seed: Optional[int] = None):
+def golden_replay(name: str, scheduler=None, seed: Optional[int] = None,
+                  sentinel=None):
     """Replay a golden episode under the canonical golden configuration
     (fixed seed, half tick scale, default replay ladder, fixed engine
     capacity).  Returns ``(VariationReport, scheduler)`` so callers can
     chain episodes through one compiled scheduler; a passed-in
-    ``scheduler`` must have been built at ``GOLDEN_CAPACITY``."""
+    ``scheduler`` must have been built at ``GOLDEN_CAPACITY``.
+
+    ``sentinel`` (a ``repro.analysis.TraceSentinel``) guards the
+    steady-state replay loop — see ``ScenarioReplayer.run``."""
     if seed is None:
         seed = GOLDEN_EPISODES[name]
     trace = compile_trace(get_episode(name), seed=seed,
@@ -163,7 +167,7 @@ def golden_replay(name: str, scheduler=None, seed: Optional[int] = None):
     replayer = ScenarioReplayer(
         trace, scheduler=scheduler,
         capacity=GOLDEN_CAPACITY if scheduler is None else None)
-    return replayer.run(), replayer.scheduler
+    return replayer.run(sentinel=sentinel), replayer.scheduler
 
 
 def golden_path(directory, name: str) -> Path:

@@ -27,6 +27,7 @@ into the modeled costs, breaking golden fixtures.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import math
@@ -332,7 +333,14 @@ class ScenarioReplayer:
         self.scheduler = scheduler
         self.fusion_queue = fusion_queue
 
-    def run(self) -> VariationReport:
+    def run(self, sentinel=None) -> VariationReport:
+        """Replay the episode.  ``sentinel`` (a
+        ``repro.analysis.TraceSentinel``) guards the steady-state segment
+        loop: warmup compiles happen *before* it is entered, so a default
+        sentinel (compile budget 0, transfer_guard "disallow") asserts
+        that no tick recompiles anything and no implicit host↔device
+        transfer hides in the per-tick path.  The sentinel changes no
+        data flow — reports stay byte-identical with or without it."""
         tr = self.trace
         sched = self.scheduler
         # compile + seed the shared cost model (modeled probes: offline,
@@ -342,6 +350,14 @@ class ScenarioReplayer:
             sched.add_stream(sid, tr.budget_s)
 
         rng = np.random.default_rng((tr.seed * 2_147_483_629 + 0x5EED) & 0x7FFFFFFF)
+        guard = sentinel if sentinel is not None else contextlib.nullcontext()
+        with guard:
+            reports = self._run_segments(tr, sched, rng)
+        return VariationReport(
+            episode=tr.name, seed=tr.seed, n_ticks=tr.n_ticks,
+            clock_s=self.clock.time(), segments=reports)
+
+    def _run_segments(self, tr, sched, rng) -> list[SegmentReport]:
         reports: list[SegmentReport] = []
         tick_idx = 0
         for seg in tr.segments:
@@ -388,9 +404,7 @@ class ScenarioReplayer:
                 self.clock.advance_to(t0 + tr.period_s)
                 tick_idx += 1
             reports.append(self._segment_report(seg, active, rows, drops, sync))
-        return VariationReport(
-            episode=tr.name, seed=tr.seed, n_ticks=tr.n_ticks,
-            clock_s=self.clock.time(), segments=reports)
+        return reports
 
     @staticmethod
     def _segment_report(seg, active, rows, drops, sync) -> SegmentReport:

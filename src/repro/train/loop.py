@@ -145,6 +145,8 @@ class Trainer:
         step_fn = make_train_step(
             self.model, self.cfg.opt, self.cfg.grad_accum, micro_spec=micro_spec
         )
+        # tvlint: disable=TV002 (built lazily once per batch structure and
+        # cached by the caller — not a per-step jit)
         return jax.jit(
             step_fn,
             in_shardings=(self.param_spec, self.opt_spec, bspec),

@@ -1,0 +1,628 @@
+"""Tests for the timing-hazard analyzer: tvlint rules TV001-TV006,
+suppression comments, baseline diff, CLI exit codes, and the runtime
+TraceSentinel (including the sentinel-wrapped golden episode)."""
+import json
+import shutil
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    RULES,
+    SentinelReport,
+    TimingHazardError,
+    TraceSentinel,
+    diff_baseline,
+    lint_source,
+    load_baseline,
+    report_dict,
+    write_baseline,
+)
+from repro.analysis.__main__ import main as tvlint_main
+
+REPO = Path(__file__).parent.parent
+
+
+def _lint(src: str):
+    return lint_source(textwrap.dedent(src), "pkg/mod.py")
+
+
+def _rules(src: str, active_only: bool = True):
+    return [f.rule for f in _lint(src)
+            if not (active_only and f.suppressed)]
+
+
+# ------------------------------------------------------------- TV001 --
+
+def test_tv001_flags_host_sync_on_traced_value_in_loop():
+    src = """
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+
+        def process(frames):
+            out = []
+            for f in frames:
+                y = jnp.tanh(f)
+                out.append(np.asarray(y))
+            return out
+    """
+    assert "TV001" in _rules(src)
+
+
+def test_tv001_flags_item_and_device_get_in_loop():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        def drain_all(queue):
+            for dev in queue:
+                host = jax.device_get(dev)
+            s = jnp.sum(host)
+            vals = [s.item() for _ in range(3)]
+            return vals
+    """
+    rules = _rules(src)
+    assert rules.count("TV001") == 2
+
+
+def test_tv001_silent_on_single_readback_and_host_arrays():
+    src = """
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+
+        def tick(frames):
+            dev = [jnp.tanh(f) for f in frames]
+            host = jax.device_get(dev)        # ONE readback, outside loops
+            return [np.asarray(h) * 2 for h in host]
+    """
+    # host is no longer device-tracked after device_get assignment; the
+    # loop's np.asarray operates on host arrays
+    assert "TV001" not in _rules(src)
+
+
+def test_tv001_block_until_ready_is_a_fence_not_a_hazard():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        def run(frames):
+            for f in frames:
+                y = jnp.tanh(f)
+                jax.block_until_ready(y)
+            return y
+    """
+    assert "TV001" not in _rules(src)
+
+
+# ------------------------------------------------------------- TV002 --
+
+def test_tv002_flags_jit_inside_loop_and_hot_function():
+    src = """
+        import jax
+
+        def serve(batches):
+            for b in batches:
+                f = jax.jit(lambda x: x + 1)
+                b = f(b)
+            return batches
+    """
+    assert "TV002" in _rules(src)
+
+
+def test_tv002_flags_jit_lambda_closing_over_loop_var():
+    src = """
+        import jax
+
+        def build(scales):
+            fns = []
+            for s in scales:
+                fns.append(jax.jit(lambda x: x * s))
+            return fns
+    """
+    assert "TV002" in _rules(src)
+
+
+def test_tv002_flags_python_branch_on_traced_value():
+    src = """
+        import jax.numpy as jnp
+
+        def clamp(x):
+            y = jnp.sum(x)
+            if y > 0:
+                return y
+            return -y
+    """
+    assert "TV002" in _rules(src)
+
+
+def test_tv002_silent_on_shape_branches_and_setup_jit():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        step = jax.jit(lambda x: x + 1)
+
+        def pad_to(x, n):
+            if x.shape[0] < n:
+                x = jnp.pad(x, (0, n - x.shape[0]))
+            while x.ndim < 3:
+                x = x[None]
+            return x
+    """
+    assert "TV002" not in _rules(src)
+
+
+# ------------------------------------------------------------- TV003 --
+
+def test_tv003_flags_global_and_unseeded_rng():
+    src = """
+        import random
+        import numpy as np
+
+        def make_noise(n):
+            a = np.random.normal(size=n)
+            rng = np.random.default_rng()
+            b = random.random()
+            return a, rng, b
+    """
+    assert _rules(src).count("TV003") == 3
+
+
+def test_tv003_flags_wall_clock_seed():
+    src = """
+        import time
+        import jax
+
+        def fresh_key():
+            return jax.random.PRNGKey(int(time.time()))
+    """
+    assert "TV003" in _rules(src)
+    src2 = """
+        import time
+        import numpy as np
+
+        def fresh_rng():
+            return np.random.default_rng(time.time_ns())
+    """
+    assert "TV003" in _rules(src2)
+
+
+def test_tv003_silent_on_seeded_rng():
+    src = """
+        import numpy as np
+        import jax
+
+        def make(seed):
+            rng = np.random.default_rng(seed)
+            key = jax.random.PRNGKey(42)
+            return rng, key
+    """
+    assert "TV003" not in _rules(src)
+
+
+# ------------------------------------------------------------- TV004 --
+
+def test_tv004_flags_donating_call_per_tick():
+    src = """
+        import jax
+
+        update = jax.jit(lambda buf, x: buf + x, donate_argnums=(0,))
+
+        def tick(buf, frames):
+            for f in frames:
+                buf = update(buf, f)
+            return buf
+    """
+    assert "TV004" in _rules(src)
+
+
+def test_tv004_silent_on_churn_frequency_donation():
+    src = """
+        import jax
+
+        update = jax.jit(lambda buf, x: buf + x, donate_argnums=(0,))
+
+        def carve_out(buf, frame):
+            return update(buf, frame)
+    """
+    assert "TV004" not in _rules(src)
+
+
+# ------------------------------------------------------------- TV005 --
+
+def test_tv005_flags_unjitted_device_fn_in_hot_loop():
+    src = """
+        import jax.numpy as jnp
+
+        def infer_once(x):
+            return jnp.tanh(x @ x)
+
+        def serve(frames):
+            return [infer_once(f) for f in frames]
+    """
+    assert "TV005" in _rules(src)
+
+
+def test_tv005_silent_when_jitted_or_traced_under_caller():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        def _inner(x):
+            return jnp.tanh(x)
+
+        def model_step(x):
+            # device-definitional caller: _inner is traced under the
+            # caller's jit, not dispatched op-by-op
+            for _ in range(3):
+                x = _inner(x) + jnp.ones_like(x)
+            return x
+
+        step = jax.jit(model_step)
+
+        def serve(frames):
+            return [step(f) for f in frames]
+    """
+    assert "TV005" not in _rules(src)
+
+
+def test_tv005_silent_on_factory_handed_to_jit():
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        def make_step(scale):
+            def f(x):
+                return jnp.tanh(x) * scale
+            return f
+
+        def build_step(scale):
+            step_fn = make_step(scale)
+            return jax.jit(step_fn)
+    """
+    assert "TV005" not in _rules(src)
+
+
+# ------------------------------------------------------------- TV006 --
+
+def test_tv006_flags_unfenced_interval_around_jitted_call():
+    src = """
+        import time
+        import jax
+
+        predict = jax.jit(lambda x: x + 1)
+
+        def measure(x):
+            t0 = time.perf_counter()
+            y = predict(x)
+            dt = time.perf_counter() - t0
+            return y, dt
+    """
+    assert "TV006" in _rules(src)
+
+
+def test_tv006_silent_when_fenced():
+    src = """
+        import time
+        import jax
+
+        predict = jax.jit(lambda x: x + 1)
+
+        def measure(x):
+            t0 = time.perf_counter()
+            y = predict(x)
+            jax.block_until_ready(y)
+            dt = time.perf_counter() - t0
+            return y, dt
+    """
+    assert "TV006" not in _rules(src)
+
+
+# ------------------------------------------------- finding metadata ---
+
+def test_findings_carry_location_axis_and_hint():
+    src = """
+        import numpy as np
+
+        def tick(n):
+            return np.random.normal(size=n)
+    """
+    (f,) = _lint(src)
+    assert f.rule == "TV003"
+    assert f.axis == RULES["TV003"].axis == "data"
+    assert f.path == "pkg/mod.py"
+    assert f.line > 0
+    assert f.scope == "tick"
+    assert f.hint
+    assert f.key.startswith("pkg/mod.py::tick::TV003::")
+    assert "pkg/mod.py" in f.render() and "fix:" in f.render()
+
+
+def test_every_rule_maps_to_a_paper_axis():
+    from repro.analysis import AXES
+    assert {r.axis for r in RULES.values()} == set(AXES)
+    assert sorted(RULES) == [f"TV00{i}" for i in range(1, 7)]
+
+
+# ------------------------------------------------- suppressions -------
+
+def test_inline_suppression_marks_finding_suppressed():
+    src = """
+        import numpy as np
+
+        def tick(n):
+            return np.random.normal(size=n)  # tvlint: disable=TV003 (test)
+    """
+    (f,) = _lint(src)
+    assert f.suppressed
+
+
+def test_standalone_multiline_suppression_falls_through_comments():
+    src = """
+        import numpy as np
+
+        def tick(n):
+            # tvlint: disable=TV003 (fixture noise is not part of the
+            # measured path; determinism is irrelevant here)
+            return np.random.normal(size=n)
+    """
+    (f,) = _lint(src)
+    assert f.suppressed
+
+
+def test_suppression_is_rule_specific():
+    src = """
+        import numpy as np
+
+        def tick(n):
+            return np.random.normal(size=n)  # tvlint: disable=TV001
+    """
+    (f,) = _lint(src)
+    assert not f.suppressed
+
+
+# ------------------------------------------- determinism / stability --
+
+HAZARD_SRC = """\
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def serve(frames):
+    out = []
+    for f in frames:
+        y = jnp.tanh(f)
+        out.append(np.asarray(y))
+    return out
+
+
+def reseed(n):
+    return np.random.default_rng()
+"""
+
+
+def test_lint_output_is_deterministic():
+    a = report_dict(lint_source(HAZARD_SRC, "m.py"))
+    b = report_dict(lint_source(HAZARD_SRC, "m.py"))
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def _reformat(src: str, rng: np.random.Generator) -> str:
+    """Formatting-only edit: sprinkle blank lines and comment lines at
+    random positions (never inside a continuation)."""
+    lines = src.splitlines()
+    out = []
+    for line in lines:
+        while rng.random() < 0.3:
+            out.append("" if rng.random() < 0.5
+                       else " " * (len(line) - len(line.lstrip()))
+                       + "# a formatting-only comment")
+        out.append(line)
+    return "\n".join(out) + "\n"
+
+
+def test_finding_keys_stable_under_formatting_only_edits():
+    base = {f.key for f in lint_source(HAZARD_SRC, "m.py")}
+    assert base
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        edited = _reformat(HAZARD_SRC, rng)
+        assert {f.key for f in lint_source(edited, "m.py")} == base
+
+
+def test_finding_keys_change_when_hazard_statement_changes():
+    base = {f.key for f in lint_source(HAZARD_SRC, "m.py")}
+    edited = HAZARD_SRC.replace("np.asarray(y)", "np.asarray(y * 2)")
+    assert {f.key for f in lint_source(edited, "m.py")} != base
+
+
+# ------------------------------------------------- baseline diff ------
+
+def test_baseline_accepts_known_and_flags_new(tmp_path):
+    findings = lint_source(HAZARD_SRC, "m.py")
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(findings, bl_path)
+    baseline = load_baseline(bl_path)
+    new, stale = diff_baseline(findings, baseline)
+    assert new == [] and stale == []
+    # a fresh hazard not in the baseline is new
+    edited = HAZARD_SRC + "\n\ndef tick(n):\n    return np.random.rand(n)\n"
+    new2, _ = diff_baseline(lint_source(edited, "m.py"), baseline)
+    assert [f.rule for f in new2] == ["TV003"]
+    # fixing a baselined hazard leaves a stale entry, not a failure
+    fixed = HAZARD_SRC.replace("np.random.default_rng()",
+                               "np.random.default_rng(0)")
+    new3, stale3 = diff_baseline(lint_source(fixed, "m.py"), baseline)
+    assert new3 == [] and len(stale3) == 1
+
+
+# ------------------------------------------------- CLI / gate ---------
+
+def _copy_engine_tree(tmp_path: Path) -> Path:
+    """Replicate src/repro/batched/engine.py under a scratch root so
+    finding keys match the committed baseline's relative paths."""
+    root = tmp_path / "src"
+    dest = root / "repro" / "batched"
+    dest.mkdir(parents=True)
+    shutil.copyfile(REPO / "src" / "repro" / "batched" / "engine.py",
+                    dest / "engine.py")
+    return root
+
+
+def test_cli_baseline_gate_passes_on_clean_tree_and_fails_on_injection(
+        tmp_path, capsys):
+    root = _copy_engine_tree(tmp_path)
+    baseline = str(REPO / "analysis" / "baseline.json")
+    target = root / "repro" / "batched" / "engine.py"
+
+    # shipped engine.py is hazard-free against the committed baseline
+    assert tvlint_main([str(root / "repro"), "--root", str(root),
+                        "--baseline", baseline]) == 0
+
+    # inject a TV002 retrace hazard (jit in a per-tick loop): the gate
+    # must fail even though the baseline file itself is untouched
+    target.write_text(target.read_text() + textwrap.dedent("""
+
+        def _injected_tick(xs):
+            for x in xs:
+                f = jax.jit(lambda v: v + 1)
+                x = f(x)
+            return xs
+    """))
+    assert tvlint_main([str(root / "repro"), "--root", str(root),
+                        "--baseline", baseline]) == 1
+    out = capsys.readouterr().out
+    assert "TV002" in out
+
+    # and a TV001 host-sync injection fails the same way
+    target.write_text(target.read_text() + textwrap.dedent("""
+
+        def _injected_drain(devs):
+            return [np.asarray(jnp.tanh(d)) for d in devs]
+    """))
+    assert tvlint_main([str(root / "repro"), "--root", str(root),
+                        "--baseline", baseline]) == 1
+
+
+def test_cli_exit_codes_and_regen(tmp_path):
+    mod = tmp_path / "mod.py"
+    mod.write_text("import numpy as np\n\n"
+                   "def tick(n):\n    return np.random.rand(n)\n")
+    # findings without a baseline: exit 1
+    assert tvlint_main([str(mod), "--root", str(tmp_path)]) == 1
+    # missing path: exit 2
+    assert tvlint_main([str(tmp_path / "nope.py")]) == 2
+    # missing baseline file: exit 2
+    assert tvlint_main([str(mod), "--root", str(tmp_path),
+                        "--baseline", str(tmp_path / "none.json")]) == 2
+    # regen writes the baseline; the gate then passes and the report
+    # carries the finding inventory
+    bl = tmp_path / "bl.json"
+    rep = tmp_path / "report.json"
+    assert tvlint_main([str(mod), "--root", str(tmp_path),
+                        "--baseline", str(bl), "--regen-baseline"]) == 0
+    assert tvlint_main([str(mod), "--root", str(tmp_path),
+                        "--baseline", str(bl), "--report", str(rep)]) == 0
+    data = json.loads(rep.read_text())
+    assert data["active"] == 1
+    assert data["by_rule"] == {"TV003": 1}
+
+
+def test_shipped_tree_is_lint_clean():
+    """The acceptance gate itself: the committed tree has no hazards
+    beyond the committed baseline."""
+    assert tvlint_main([str(REPO / "src" / "repro"),
+                        "--root", str(REPO / "src"),
+                        "--baseline",
+                        str(REPO / "analysis" / "baseline.json"),
+                        "--quiet"]) == 0
+
+
+# ------------------------------------------------- TraceSentinel ------
+
+def test_sentinel_counts_real_compiles_and_enforces_budget():
+    @jax.jit
+    def fresh(x):
+        return x * 2 + 1
+
+    with pytest.raises(TimingHazardError):
+        with TraceSentinel(compile_budget=0, transfer_guard="allow"):
+            fresh(jnp.ones(3))
+
+    @jax.jit
+    def fresh2(x):
+        return x * 3 + 1
+
+    with TraceSentinel(compile_budget=1, transfer_guard="allow") as sent:
+        fresh2(jnp.ones(3))
+    assert sent.report().compiles == 1
+
+
+def test_sentinel_warm_path_is_compile_free():
+    @jax.jit
+    def f(x):
+        return x + 1
+
+    x = jnp.ones(4)
+    jax.block_until_ready(f(x))                # warmup outside
+    with TraceSentinel(compile_budget=0, transfer_guard="allow") as sent:
+        for _ in range(5):
+            x = f(x)
+        jax.block_until_ready(x)
+    rep = sent.report()
+    assert rep.compiles == 0 and rep.ok
+    assert isinstance(rep, SentinelReport)
+    assert "compiles=0/0" in rep.render()
+
+
+def test_sentinel_transfer_guard_catches_implicit_transfer():
+    @jax.jit
+    def g(x):
+        return x + 1
+
+    jax.block_until_ready(g(jax.device_put(np.ones(3, np.float32))))
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with TraceSentinel(compile_budget=0):
+            g(np.ones(3, np.float32))          # implicit host→device
+
+    # explicit device_put stays allowed
+    with TraceSentinel(compile_budget=0) as sent:
+        g(jax.device_put(np.ones(3, np.float32)))
+    assert sent.report().ok
+
+
+def test_sentinel_non_strict_reports_instead_of_raising():
+    @jax.jit
+    def h(x):
+        return x - 1
+
+    with TraceSentinel(compile_budget=0, transfer_guard="allow",
+                       strict=False) as sent:
+        h(jnp.ones(5))
+    rep = sent.report()
+    assert rep.compiles >= 1 and not rep.ok
+    with pytest.raises(TimingHazardError):
+        sent.check()
+
+
+# --------------------------------------- sentinel-wrapped golden ------
+
+def test_sentinel_wrapped_golden_episode_is_clean_and_byte_identical():
+    """Acceptance: a TraceSentinel-wrapped golden episode sees zero
+    recompiles and zero disallowed transfers after warmup, and the
+    variation report is byte-identical to an unguarded run."""
+    from repro.scenarios.golden import golden_replay
+
+    plain, _ = golden_replay("urban_rush_hour")
+    sent = TraceSentinel(compile_budget=0, transfer_guard="disallow")
+    guarded, _ = golden_replay("urban_rush_hour", sentinel=sent)
+    rep = sent.report()
+    assert rep.compiles == 0 and rep.ok
+    assert guarded.to_json(indent=2) == plain.to_json(indent=2)

@@ -1,0 +1,64 @@
+"""Hypothesis properties for tvlint: deterministic output, and finding
+keys invariant under formatting-only edits (blank lines + comments).
+
+A seeded non-hypothesis variant of the same property lives in
+``test_analysis.py`` so the invariant is exercised even where hypothesis
+is not installed.
+"""
+import json
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import lint_source, report_dict
+
+HAZARD_SRC = """\
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def serve(frames):
+    out = []
+    for f in frames:
+        y = jnp.tanh(f)
+        out.append(np.asarray(y))
+    return out
+
+
+def reseed(n):
+    return np.random.default_rng()
+"""
+
+BASE_LINES = HAZARD_SRC.splitlines()
+BASE_KEYS = {f.key for f in lint_source(HAZARD_SRC, "m.py")}
+
+# one draw per line gap: how many filler lines to insert before it
+fillers = st.lists(
+    st.integers(min_value=0, max_value=2),
+    min_size=len(BASE_LINES), max_size=len(BASE_LINES))
+filler_kind = st.booleans()
+
+
+@given(fillers, st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_keys_invariant_under_formatting_only_edits(counts, rnd):
+    out = []
+    for line, n in zip(BASE_LINES, counts):
+        indent = " " * (len(line) - len(line.lstrip()))
+        for _ in range(n):
+            out.append("" if rnd.random() < 0.5
+                       else f"{indent}# formatting-only comment")
+        out.append(line)
+    edited = "\n".join(out) + "\n"
+    assert {f.key for f in lint_source(edited, "m.py")} == BASE_KEYS
+
+
+@given(st.integers(min_value=0, max_value=10))
+@settings(max_examples=20, deadline=None)
+def test_lint_is_deterministic(_):
+    a = report_dict(lint_source(HAZARD_SRC, "m.py"))
+    b = report_dict(lint_source(HAZARD_SRC, "m.py"))
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)

@@ -4,6 +4,7 @@ and fusion-accounting bugfixes that ride along with it.
 import numpy as np
 import pytest
 
+from repro.analysis import TraceSentinel
 from repro.anytime import Rung, calibrate
 from repro.anytime.cost import RungCostModel, SceneFeatures
 from repro.batched import BatchedPerceptionEngine, RungBucketScheduler
@@ -119,20 +120,25 @@ def test_batched_matches_serial_per_rung(name, scale, pad):
 
 def test_no_retrace_on_join_and_leave():
     """Slot carve-out from the fixed-capacity padded batch: stream churn
-    must never retrace the jitted batched step."""
+    must never retrace the jitted batched step.  The sentinel counts
+    *actual* backend compiles (budget 0 after explicit warmup) and
+    disallows implicit host↔device transfers for the whole churn
+    sequence — strictly stronger than the old ``trace_count == 1``."""
     eng = BatchedPerceptionEngine(build_pipeline("early_exit"), capacity=4)
     img = generate_scene(CITY, 1).image
-    eng.join("a")
-    eng.join("b")
-    eng.tick({"a": img, "b": img})
-    eng.join("c")                              # join mid-flight
-    eng.tick({"a": img, "b": img, "c": img})
-    eng.leave("b")
-    eng.tick({"a": img, "c": img})
-    eng.leave("a")
-    eng.leave("c")
-    eng.join("d")                              # rejoin after full drain
-    eng.tick({"d": img})
+    eng.compile()                              # warmup outside the sentinel
+    with TraceSentinel(compile_budget=0, transfer_guard="disallow"):
+        eng.join("a")
+        eng.join("b")
+        eng.tick({"a": img, "b": img})
+        eng.join("c")                          # join mid-flight
+        eng.tick({"a": img, "b": img, "c": img})
+        eng.leave("b")
+        eng.tick({"a": img, "c": img})
+        eng.leave("a")
+        eng.leave("c")
+        eng.join("d")                          # rejoin after full drain
+        eng.tick({"d": img})
     assert eng.trace_count == 1
     assert eng.ticks == 4
 
@@ -196,9 +202,13 @@ def test_rung_bucket_scheduling_splits_by_budget():
     sched.add_stream("loose1", 50.0 * top.e2e_mean)
     sched.add_stream("tight", 1e-9)            # nothing can fit: floor rung
     last = None
-    for t in range(4):
-        scenes = {sid: generate_scene(CITY, 10 + t) for sid in sched.streams}
-        last = sched.tick(scenes)
+    # bucket churn across rungs must neither compile nor transfer
+    # implicitly once the scheduler is warm
+    with TraceSentinel(compile_budget=0, transfer_guard="disallow"):
+        for t in range(4):
+            scenes = {sid: generate_scene(CITY, 10 + t)
+                      for sid in sched.streams}
+            last = sched.tick(scenes)
     assert set(last.buckets) == {ladder.top.name, ladder.floor.name}
     assert sorted(last.buckets[ladder.top.name]) == ["loose0", "loose1"]
     assert last.buckets[ladder.floor.name] == ["tight"]

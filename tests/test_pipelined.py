@@ -12,6 +12,7 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+from repro.analysis import TraceSentinel
 from repro.anytime import Rung, calibrate
 from repro.anytime.controller import ContractController, ControllerConfig
 from repro.anytime.cost import RungCostModel, SceneFeatures
@@ -110,14 +111,16 @@ def test_join_leave_mid_pipeline_drains_cleanly():
     built = build_pipeline("early_exit")
     eng = BatchedPerceptionEngine(built, capacity=3, depth=2)
     img = generate_scene(CITY, 1).image
-    eng.join("a")
-    eng.join("b")
-    eng.tick({"a": img, "b": img})             # in flight: {a, b}
-    eng.join("c")                              # join mid-pipeline
-    rec, outs = eng.tick({"a": img, "b": img, "c": img})
-    assert set(outs) == {"a", "b"}             # drained tick predates c
-    eng.leave("b")                             # leave with a frame in flight
-    tail = eng.flush()
+    eng.compile()                              # warmup outside the sentinel
+    with TraceSentinel(compile_budget=0, transfer_guard="disallow"):
+        eng.join("a")
+        eng.join("b")
+        eng.tick({"a": img, "b": img})         # in flight: {a, b}
+        eng.join("c")                          # join mid-pipeline
+        rec, outs = eng.tick({"a": img, "b": img, "c": img})
+        assert set(outs) == {"a", "b"}         # drained tick predates c
+        eng.leave("b")                         # leave with frame in flight
+        tail = eng.flush()
     assert len(tail) == 1
     assert set(tail[0][1]) == {"a", "b", "c"}  # b's in-flight result drains
     # b left: its output is returned to the caller but no longer
@@ -126,11 +129,11 @@ def test_join_leave_mid_pipeline_drains_cleanly():
     assert eng.trace_count == 1
     assert eng.assemble_trace_count == 1
     assert eng.update_trace_count == 1
-    # a rejoin after full churn still works without retrace
-    eng.join("d")
-    rec, outs = eng.tick({"a": img, "d": img})
-    eng.flush()
-    assert eng.trace_count == 1
+    # a rejoin after full churn still works without compile or retrace
+    with TraceSentinel(compile_budget=0, transfer_guard="disallow"):
+        eng.join("d")
+        rec, outs = eng.tick({"a": img, "d": img})
+        eng.flush()
 
 
 def test_h2d_bytes_are_dirty_slots_only():
@@ -311,11 +314,15 @@ def test_scheduler_depth2_pairs_stale_results_with_their_scenes():
     sched.add_stream("b", 50.0 * top.e2e_mean)
     n_ticks = 4
     rows, tail_rows = [], []
-    for t in range(n_ticks):
-        scenes = {sid: generate_scene(CITY, 10 + t) for sid in sched.streams}
-        res = sched.tick(scenes)
-        rows.extend(res.rows)
-    tail = sched.flush()
+    # the warm depth-2 steady state must neither compile nor transfer
+    # implicitly, flush included
+    with TraceSentinel(compile_budget=0, transfer_guard="disallow"):
+        for t in range(n_ticks):
+            scenes = {sid: generate_scene(CITY, 10 + t)
+                      for sid in sched.streams}
+            res = sched.tick(scenes)
+            rows.extend(res.rows)
+        tail = sched.flush()
     tail_rows = tail.rows
     # flushed detections are recoverable, as during a regular tick
     assert set(tail.outputs) == {"a", "b"}
