@@ -1,6 +1,8 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core.stats import summarize
@@ -59,3 +61,16 @@ def drain_results() -> list[dict]:
     out = list(RESULTS)
     RESULTS.clear()
     return out
+
+
+def trace_out_path(name: str) -> str | None:
+    """Chrome-trace artifact path for a benchmark module, or None.
+
+    ``benchmarks.run --trace-out DIR`` exports ``BENCH_TRACE_OUT``;
+    tracing-aware benchmarks then write ``DIR/<name>.trace.json``
+    (Perfetto-loadable) next to their CSV records."""
+    directory = os.environ.get("BENCH_TRACE_OUT")
+    if not directory:
+        return None
+    os.makedirs(directory, exist_ok=True)
+    return os.path.join(directory, f"{name}.trace.json")

@@ -37,7 +37,7 @@ import numpy as np
 from repro.batched import BatchedPerceptionEngine
 from repro.perception import SceneConfig, build_pipeline, generate_scene
 
-from .common import csv_line, table
+from .common import csv_line, table, trace_out_path
 
 RUNG = "two_stage"              # the ladder's top rung (paper's dynamic-
                                 # shape pipeline) — the headline fidelity
@@ -69,12 +69,19 @@ def _serve_block(eng, cfgs, n_ticks, tick0):
 def run() -> list[dict]:
     rows = []
     fps_at = {n: {} for n in STREAM_COUNTS}
+    trace_path = trace_out_path("pipelined")
+    obs = None
+    if trace_path:
+        from repro.obs import Observatory
+        obs = Observatory()
     for n in STREAM_COUNTS:
         cfgs = [SceneConfig("city", seed=100 + s) for s in range(n)]
         engines = {}
         for d in DEPTHS:
             built = build_pipeline(RUNG)
-            eng = BatchedPerceptionEngine(built, capacity=n, depth=d)
+            eng = BatchedPerceptionEngine(built, capacity=n, depth=d,
+                                          obs=obs,
+                                          obs_tag=f"streams{n}/depth{d}")
             for s in range(n):
                 eng.join(f"cam{s}")
             eng.compile()
@@ -151,6 +158,11 @@ def run() -> list[dict]:
     csv_line("pipelined/h2d_dirty_fraction",
              h2d[0] / full_batch * 100,
              f"dirty_kb={h2d[0]/1024:.0f},full_kb={full_batch/1024:.0f}")
+
+    if obs is not None:
+        obs.write_trace(trace_path, process_label="pipelined")
+        print(f"wrote Chrome trace to {trace_path} "
+              f"({obs.tracer.n_recorded} spans, {obs.tracer.dropped} dropped)")
 
     # ---- CI smoke: the pipeline must never lose to sync beyond noise ----
     d1, d2 = fps_at[max(STREAM_COUNTS)][1], fps_at[max(STREAM_COUNTS)][2]

@@ -4,7 +4,9 @@ Prints each benchmark's table plus ``CSV,name,us_per_call,derived`` lines,
 and mirrors every CSV record into a machine-readable ``BENCH_results.json``
 (per-benchmark ``us_per_call`` + derived metrics, wall time, status) so
 the perf trajectory is trackable across commits.  Override the output
-path with ``BENCH_RESULTS_PATH``.
+path with ``BENCH_RESULTS_PATH``.  ``--trace-out DIR`` makes the
+tracing-aware benchmarks (scenarios, pipelined, obs_overhead) also drop
+Chrome trace_event JSON artifacts in ``DIR``.
 """
 from __future__ import annotations
 
@@ -31,8 +33,22 @@ MODULES = [
     "batched",
     "pipelined",
     "scenarios",
+    "obs_overhead",
     "roofline",
 ]
+
+
+def _parse_argv(argv: list[str]) -> list[str]:
+    """Split flags from module names; exports --trace-out as
+    ``BENCH_TRACE_OUT`` for tracing-aware benchmarks (common.trace_out_path)."""
+    if "--trace-out" in argv:
+        i = argv.index("--trace-out")
+        if i + 1 >= len(argv):
+            raise SystemExit(
+                "usage: python -m benchmarks.run [--trace-out DIR] [module ...]")
+        os.environ["BENCH_TRACE_OUT"] = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    return argv
 
 
 def main() -> int:
@@ -40,7 +56,7 @@ def main() -> int:
 
     from .common import drain_results
 
-    only = sys.argv[1:] or MODULES
+    only = _parse_argv(sys.argv[1:]) or MODULES
     failures = []
     report: dict[str, dict] = {}
     for name in only:

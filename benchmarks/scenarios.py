@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from repro.scenarios import ScenarioReplayer, compile_trace, get_episode
 
-from .common import csv_line, table
+from .common import csv_line, table, trace_out_path
 
 EPISODES = (
     "urban_rush_hour",
@@ -27,9 +27,15 @@ CAPACITY = 4
 def run() -> None:
     sched = None
     summary_rows = []
+    trace_path = trace_out_path("scenarios")
+    obs = None
+    if trace_path:
+        from repro.obs import Observatory
+        obs = Observatory()
     for name in EPISODES:
         trace = compile_trace(get_episode(name), seed=SEED)
-        replayer = ScenarioReplayer(trace, scheduler=sched, capacity=CAPACITY)
+        replayer = ScenarioReplayer(trace, scheduler=sched, capacity=CAPACITY,
+                                    obs=obs)
         sched = replayer.scheduler
         report = replayer.run()
 
@@ -65,6 +71,10 @@ def run() -> None:
             "fusion_loss": tot["fusion_dropped"] + tot["fusion_stranded"],
         })
     table(summary_rows, "episode summary (deterministic replay)")
+    if obs is not None:
+        obs.write_trace(trace_path, process_label="scenarios")
+        print(f"wrote Chrome trace to {trace_path} "
+              f"({obs.tracer.n_recorded} spans, {obs.tracer.dropped} dropped)")
 
 
 if __name__ == "__main__":

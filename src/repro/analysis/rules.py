@@ -37,7 +37,10 @@ Rules (axis in brackets):
 * **TV006 [end_to_end]** — a ``time.perf_counter()``/``time.time()``
   interval closed after calling a jitted callable with no
   ``block_until_ready``/``device_get`` fence in between: the number
-  measures async dispatch, not execution.
+  measures async dispatch, not execution.  A
+  ``with tracer.span(..., fence=...)`` context manager (the obs layer's
+  fenced timing site) counts as a fence: it calls
+  ``jax.block_until_ready`` before closing the span.
 """
 from __future__ import annotations
 
@@ -540,6 +543,25 @@ class _Analyzer(ast.NodeVisitor):
                    "per-tick calls dispatch op-by-op")
 
     # ------------------------------------------------ TV006 -----------
+    @staticmethod
+    def _with_fences(s: ast.stmt) -> bool:
+        """True for a ``with ...span(..., fence=...)`` statement — the obs
+        tracer's fenced timing site: the context manager calls
+        ``jax.block_until_ready`` before closing the span, so exiting the
+        block fences any open wall-clock interval."""
+        for item in getattr(s, "items", []) or []:
+            call = item.context_expr
+            if isinstance(call, ast.Call) \
+                    and isinstance(call.func, ast.Attribute) \
+                    and call.func.attr == "span":
+                for kw in call.keywords:
+                    if kw.arg == "fence":
+                        if isinstance(kw.value, ast.Constant) \
+                                and not kw.value.value:
+                            break          # explicit fence=False/None
+                        return True
+        return False
+
     def _scan_tv006(self, fn) -> None:
         """Linear scan of a function body in source order: a clock anchor
         ``t = time.perf_counter()`` closed by ``... - t`` after a jitted
@@ -549,6 +571,11 @@ class _Analyzer(ast.NodeVisitor):
         def flatten(body) -> None:
             for s in body:
                 stmts.append(s)
+                if self._with_fences(s):
+                    # the fenced-span block is one atomic timing site:
+                    # its body is covered by walking the With node itself,
+                    # and the exit fence lands after everything inside
+                    continue
                 for field in ("body", "orelse", "finalbody"):
                     sub = getattr(s, field, None)
                     if sub and not isinstance(
@@ -596,6 +623,11 @@ class _Analyzer(ast.NodeVisitor):
                     for st in anchors.values():
                         st["jitted"] = True
                         st["fenced"] = False
+            if self._with_fences(s):
+                # block exit runs after every call inside: the span CM's
+                # block_until_ready fences whatever the body dispatched
+                for st in anchors.values():
+                    st["fenced"] = True
             if isinstance(s, ast.Assign) and isinstance(s.value, ast.Call) \
                     and _dotted(s.value.func, self.aliases) in _CLOCK_CALLS:
                 for t in s.targets:

@@ -38,12 +38,17 @@ _TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
 _lock = threading.Lock()
 _counters = {"compiles": 0, "traces": 0}
 _installed = False
+_active: list["TraceSentinel"] = []   # sentinels currently entered
 
 
 def _listener(event: str, duration: float, **kwargs) -> None:
     if event == _COMPILE_EVENT:
         with _lock:
             _counters["compiles"] += 1
+            watchers = [s for s in _active if s.tracer is not None]
+        # outside the lock: a tracer's own lock must never nest inside ours
+        for s in watchers:
+            s._emit_compile(duration)
     elif event == _TRACE_EVENT:
         with _lock:
             _counters["traces"] += 1
@@ -111,6 +116,12 @@ class TraceSentinel:
         When true (default), ``__exit__`` raises :class:`TimingHazardError`
         if a budget was exceeded.  When false, call :meth:`check` or
         inspect :meth:`report` manually.
+    tracer:
+        Optional ``repro.obs.SpanTracer`` (duck-typed — analysis stays
+        obs-free).  While the sentinel is entered, every real backend
+        compile is also recorded on the tracer as a ``backend_compile``
+        span on the paper's *runtime* axis, so compilation excursions
+        land in the same timeline as the serving spans they delayed.
     """
 
     def __init__(
@@ -119,21 +130,29 @@ class TraceSentinel:
         trace_budget: int | None = None,
         transfer_guard: str = "disallow",
         strict: bool = True,
+        tracer=None,
     ) -> None:
         self.compile_budget = int(compile_budget)
         self.trace_budget = (None if trace_budget is None
                              else int(trace_budget))
         self.transfer_guard = transfer_guard
         self.strict = strict
+        self.tracer = tracer
         self._start: dict[str, int] | None = None
         self._end: dict[str, int] | None = None
         self._guard_cm: contextlib.AbstractContextManager | None = None
+
+    def _emit_compile(self, duration: float) -> None:
+        t1 = self.tracer.clock()
+        self.tracer.record("backend_compile", t1 - float(duration), t1,
+                           axis="runtime")
 
     # ------------------------------------------------------------------
     def __enter__(self) -> "TraceSentinel":
         _install()
         with _lock:
             self._start = dict(_counters)
+            _active.append(self)
         self._end = None
         if self.transfer_guard != "allow":
             self._guard_cm = jax.transfer_guard(self.transfer_guard)
@@ -146,6 +165,8 @@ class TraceSentinel:
             self._guard_cm = None
         with _lock:
             self._end = dict(_counters)
+            if self in _active:
+                _active.remove(self)
         if exc_type is None and self.strict:
             self.check()
         return False

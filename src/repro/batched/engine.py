@@ -46,7 +46,8 @@ import jax
 import numpy as np
 
 from repro.bus.clock import SimClock
-from repro.core.timing import StageRecord, StageTimer, TimelineRecorder
+from repro.core.timing import (STAGE_AXES, StageRecord, StageTimer,
+                               TimelineRecorder)
 from repro.perception.data import H, W
 from repro.perception.pipelines import (
     BuiltPipeline,
@@ -94,6 +95,8 @@ class BatchedPerceptionEngine:
         clock: Optional[SimClock] = None,
         stage_cost: Optional[Callable[[str, int, float], float]] = None,
         depth: int = 1,
+        obs=None,
+        obs_tag: str = "",
         **det_kw,
     ) -> None:
         if capacity < 1:
@@ -131,6 +134,13 @@ class BatchedPerceptionEngine:
         # attributes so a scheduler can rewire them between episodes.
         self.clock = clock
         self.stage_cost = stage_cost
+        # observability: an ``repro.obs.Observatory`` (duck-typed; pure
+        # observation — attaching one never changes control flow or, under
+        # a SimClock, any emitted timestamp, so golden replays stay
+        # byte-identical with tracing on).  Mutable so schedulers can
+        # attach/detach between episodes.
+        self.obs = obs
+        self.obs_tag = obs_tag
 
         built = self.built
         step_fn = jax.vmap(
@@ -428,6 +438,8 @@ class BatchedPerceptionEngine:
         self.ticks += 1
         self.tick_log.append((n_served, lat))
         self.recorder.add(rec)
+        if self.obs is not None:
+            self._emit_tick_spans(rec, n_served)
         for sid, _slot in snapshot:
             st = self.active.get(sid)
             if st is None:
@@ -435,6 +447,36 @@ class BatchedPerceptionEngine:
             st.recorder.add(rec)
             st.frames += 1
             st.last_output = outputs[sid]
+
+    def _emit_tick_spans(self, rec: StageRecord, n_served: int) -> None:
+        """Lay this tick's stages on the observatory timeline.
+
+        The tick span ends at the tick's completion time — virtual time
+        when replaying under a SimClock (``t_virtual`` was just stamped
+        by ``_account``), the observatory clock otherwise — and the stage
+        children tile it in recorded order.  ``track`` cycles with
+        pipeline depth so overlapped ticks render on parallel Perfetto
+        rows instead of as malformed nesting."""
+        obs = self.obs
+        e2e = rec.end_to_end
+        t_end = rec.meta.get("t_virtual")
+        if t_end is None:
+            t_end = obs.clock()
+        t0 = t_end - e2e
+        rung = self.built.name
+        stream = self.obs_tag or rung
+        track = self.ticks % self.depth
+        parent = obs.record("tick", t0, t_end, stream=stream,
+                            tick=self.ticks, rung=rung,
+                            batch_size=n_served, axis="end_to_end",
+                            track=track, parent=-1)
+        t = t0
+        for name, dur in rec.stages.items():
+            obs.record(name, t, t + dur, stream=stream, tick=self.ticks,
+                       rung=rung, batch_size=n_served,
+                       axis=STAGE_AXES.get(name, "end_to_end"),
+                       track=track, parent=parent.seq)
+            t += dur
 
     # ---------------- reporting ----------------
     def _latency_series(self, recorder: TimelineRecorder) -> np.ndarray:

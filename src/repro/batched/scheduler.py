@@ -81,6 +81,7 @@ class RungBucketScheduler:
         clock: Optional[SimClock] = None,
         stage_cost: Optional[Callable[[str, str, int, float], float]] = None,
         depth: int = 1,
+        obs=None,
     ) -> None:
         if depth > 1 and stage_cost is not None:
             raise ValueError(
@@ -104,10 +105,23 @@ class RungBucketScheduler:
                 built, capacity=capacity, depth=depth)
         self.streams: Dict[str, ScheduledStream] = {}
         self._last_bucket_size: Dict[str, int] = {}
+        self._prev_rung: Dict[str, str] = {}
         self.ticks = 0
         self.clock = None
         self.stage_cost = None
+        self.obs = None
         self.set_virtual(clock, stage_cost)
+        self.set_obs(obs)
+
+    def set_obs(self, obs) -> None:
+        """Attach/detach an ``repro.obs.Observatory`` (pass None to
+        detach).  Every rung engine emits its tick spans to it, tagged
+        with the rung name; the scheduler itself emits ``rung_switch``
+        instants when a stream's controller migrates buckets."""
+        self.obs = obs
+        for rung_name, eng in self.engines.items():
+            eng.obs = obs
+            eng.obs_tag = rung_name
 
     def set_virtual(
         self,
@@ -140,6 +154,7 @@ class RungBucketScheduler:
         episodes with fresh-controller determinism but zero recompiles."""
         self.streams.clear()
         self._last_bucket_size.clear()
+        self._prev_rung.clear()
         self.ticks = 0
         self.cost = LadderCostModel(self.ladder)
         for eng in self.engines.values():
@@ -242,7 +257,15 @@ class RungBucketScheduler:
             st = self.streams[sid]
             budget = budgets[sid] if budgets is not None else st.budget_s
             sel = st.controller.select(budget, self._features(st, scene))
-            buckets.setdefault(sel.rung.name, []).append(sid)
+            rung_name = sel.rung.name
+            if self.obs is not None:
+                prev = self._prev_rung.get(sid)
+                if prev is not None and prev != rung_name:
+                    self.obs.tracer.instant(
+                        "rung_switch", stream=sid, tick=self.ticks,
+                        rung=rung_name, axis="model")
+                self._prev_rung[sid] = rung_name
+            buckets.setdefault(rung_name, []).append(sid)
 
         # 2. serve each bucket with one batched step
         latencies: Dict[str, float] = {}
@@ -316,6 +339,11 @@ class RungBucketScheduler:
                 "budget_s": budget, "latency_s": lat_frame, "miss": miss,
                 "quality": q,
                 "staleness": int(record.meta.get("staleness_ticks", 0.0)),
+                # attribution tags: the observatory's FrameSample builder
+                # groups on scenario content and per-frame work level
+                "scenario": scene.scenario,
+                "work": float(out.num_proposals or 0.0),
+                "tick": self.ticks,
             })
 
     def flush(self) -> TickResult:

@@ -26,6 +26,7 @@ __all__ = [
     "StageTimer",
     "timed_stage",
     "instrument",
+    "STAGE_AXES",
 ]
 
 # Canonical stage names from the paper's Fig. 3 timeline.
@@ -34,6 +35,19 @@ PRE = "pre_processing"
 INFER = "inference"
 POST = "post_processing"
 CANONICAL_STAGES = (READ, PRE, INFER, POST)
+
+# Default variation-axis tag per canonical stage (paper Table I): read is
+# I/O-bound, pre/post scale with input content, inference is the model.
+# Unknown stage names fall back to the residual end_to_end axis.
+STAGE_AXES = {
+    READ: "io",
+    PRE: "data",
+    INFER: "model",
+    POST: "data",
+    "upload": "io",
+    "step": "model",
+    "post": "data",
+}
 
 
 @dataclasses.dataclass
@@ -52,17 +66,35 @@ class StageRecord:
 class TimelineRecorder:
     """Accumulates StageRecords across jobs and answers the paper's
     questions: per-stage summaries, variance attribution inputs, and
-    correlation of any metadata series with end-to-end latency."""
+    correlation of any metadata series with end-to-end latency.
 
-    def __init__(self) -> None:
+    When constructed with ``metrics=`` (a ``repro.obs.MetricsHub``,
+    duck-typed so core stays obs-free), the recorder is a thin adapter:
+    every added record is also forwarded to the hub keyed by this
+    recorder's stream/rung tags plus the record's ``batch_size`` meta, so
+    legacy recorders and the span tracer share one aggregation path."""
+
+    def __init__(self, metrics: Any = None, stream: str = "",
+                 rung: str = "") -> None:
         self.records: list[StageRecord] = []
         self._welford: dict[str, Welford] = defaultdict(Welford)
+        self._metrics = metrics
+        self._stream = stream
+        self._rung = rung
 
     def add(self, record: StageRecord) -> None:
         self.records.append(record)
         for k, v in record.stages.items():
             self._welford[k].update(v)
         self._welford["end_to_end"].update(record.end_to_end)
+        if self._metrics is not None:
+            bs = int(record.meta.get("batch_size", 0))
+            for k, v in record.stages.items():
+                self._metrics.observe(self._stream, k, v,
+                                      rung=self._rung, batch_size=bs)
+            self._metrics.observe(self._stream, "end_to_end",
+                                  record.end_to_end,
+                                  rung=self._rung, batch_size=bs)
 
     def stage_series(self, stage: str) -> np.ndarray:
         return np.asarray([r.stages.get(stage, 0.0) for r in self.records])
@@ -135,11 +167,20 @@ class StageTimer:
             out = jitted(img)           # fenced automatically
         timer.note("num_objects", n)
         rec.add(timer.finish())
-    """
 
-    def __init__(self, clock: Callable[[], float] = time.perf_counter) -> None:
+    With ``tracer=`` (a ``repro.obs.SpanTracer``, duck-typed) every
+    closed interval is also forwarded as a span carrying ``tags``
+    (stream/tick/rung/batch_size/track) and the stage's default axis, so
+    stage timing lands on the unified timeline without a second clock
+    read — there is exactly one recording path."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 tracer: Any = None,
+                 tags: Mapping[str, Any] | None = None) -> None:
         self._clock = clock
         self._record = StageRecord()
+        self._tracer = tracer
+        self._tags = dict(tags or {})
 
     @contextlib.contextmanager
     def stage(self, name: str) -> Iterator[None]:
@@ -147,9 +188,15 @@ class StageTimer:
         try:
             yield
         finally:
+            t1 = self._clock()
             self._record.stages[name] = (
-                self._record.stages.get(name, 0.0) + self._clock() - t0
+                self._record.stages.get(name, 0.0) + t1 - t0
             )
+            if self._tracer is not None:
+                self._tracer.record(
+                    name, t0, t1,
+                    axis=STAGE_AXES.get(name, "end_to_end"), **self._tags
+                )
 
     def note(self, key: str, value: float) -> None:
         self._record.meta[key] = float(value)

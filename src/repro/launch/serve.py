@@ -72,6 +72,11 @@ def serve_single(args, cfg, model, params) -> None:
 
 def serve_multi_tenant(args, cfg, model, params) -> None:
     clock = SimClock()
+    obs = dashboard = None
+    if args.obs:
+        from repro.obs import Observatory
+        obs = Observatory()
+        dashboard = obs.dashboard(period=args.obs_period)
     broker = Broker(transport=CopyTransport(), seed=0)
     queue = RequestQueue()
     # callback-only subscription: every envelope goes straight into the
@@ -104,9 +109,19 @@ def serve_multi_tenant(args, cfg, model, params) -> None:
         admission=admission,
         policy_factory=lambda req: POLICY[args.deadline](),
         anytime=args.anytime,
+        obs=obs,
     )
     eng.compile()
-    eng.drain(queue, clock=clock, source=broker)
+    eng.drain(queue, clock=clock, source=broker,
+              on_step=(lambda _steps: dashboard.step())
+              if dashboard is not None else None)
+    if dashboard is not None:
+        dashboard.render()               # final state, even on short runs
+        if args.trace_out:
+            obs.write_trace(args.trace_out, process_label="serve")
+            print(f"wrote Chrome trace to {args.trace_out} "
+                  f"({obs.tracer.n_recorded} spans, "
+                  f"{obs.tracer.dropped} dropped)")
 
     agg = eng.aggregate_report()
     print(
@@ -160,7 +175,22 @@ def main() -> None:
     ap.add_argument("--degrade-factors", default="1.5,2.5",
                     help="comma-separated SLO relaxation factors tried (in "
                          "order) by --anytime before shedding")
+    ap.add_argument("--obs", action="store_true",
+                    help="attach the observability layer: periodic text "
+                         "dashboard over per-tenant latency metrics "
+                         "(multi-tenant mode)")
+    ap.add_argument("--obs-period", type=int, default=50,
+                    help="dashboard render period in engine steps")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --obs: write the Chrome trace_event JSON "
+                         "(Perfetto-loadable) here at end of run")
     args = ap.parse_args()
+
+    if (args.trace_out or args.obs_period != ap.get_default("obs_period")) \
+            and not args.obs:
+        ap.error("--trace-out/--obs-period have no effect without --obs")
+    if args.obs and args.streams <= 0:
+        ap.error("--obs needs multi-tenant mode (--streams N)")
 
     if args.anytime and args.admission == "none":
         ap.error("--anytime needs the predictive admission controller "

@@ -146,6 +146,8 @@ class MultiTenantEngine:
         admission: Optional[AdmissionController | AlwaysAdmit] = None,
         policy_factory: Callable[[StreamRequest], DeadlinePolicy] = _default_policy,
         anytime: bool = False,
+        obs=None,
+        obs_tag: str = "decode",
     ) -> None:
         self.model = model
         self.params = params
@@ -164,6 +166,12 @@ class MultiTenantEngine:
                     "nothing to rescue"
                 )
         self.policy_factory = policy_factory
+        # observability: an ``repro.obs.Observatory`` (duck-typed).  The
+        # shared decode step emits stage spans under ``obs_tag``; every
+        # scored tenant additionally feeds a per-tenant metrics key, and
+        # admission decisions land as instants on the runtime axis.
+        self.obs = obs
+        self.obs_tag = obs_tag
 
         self.trace_count = 0
         raw_step = make_serve_step(model)
@@ -258,6 +266,10 @@ class MultiTenantEngine:
         while self._free and queue:
             req = queue.pop()
             decision = self.admission.decide(req, self.n_active, now)
+            if self.obs is not None:
+                self.obs.tracer.instant(
+                    decision.action, stream=req.tenant, tick=self.steps,
+                    batch_size=self.n_active, axis="runtime")
             if decision.action == ADMIT:
                 # the anytime path may admit a degraded-SLO replacement;
                 # seat the request the decision actually granted
@@ -290,7 +302,13 @@ class MultiTenantEngine:
         self.compile()
         n_active = self.n_active
 
-        timer = StageTimer()
+        if self.obs is not None:
+            timer = StageTimer(
+                tracer=self.obs.tracer,
+                tags={"stream": self.obs_tag, "tick": self.steps,
+                      "batch_size": n_active})
+        else:
+            timer = StageTimer()
         with timer.stage("read"):
             toks = jnp.asarray(self._tokens)
         with timer.stage("inference"):
@@ -340,6 +358,11 @@ class MultiTenantEngine:
                 ts.jobs += 1
                 if lat > ts.effective_deadline():
                     ts.misses += 1
+                if self.obs is not None:
+                    # per-tenant attribution of the shared step: your token
+                    # took this long because of who you shared the batch with
+                    self.obs.metrics.observe(ts.req.tenant, "step", lat,
+                                             batch_size=n_active)
             ts.policy.observe(lat)
         for slot in done:
             self.leave(slot, now)
@@ -351,6 +374,7 @@ class MultiTenantEngine:
         clock=None,
         source=None,
         max_steps: int = 100_000,
+        on_step: Optional[Callable[[int], None]] = None,
     ) -> int:
         """Run until the queue, the batch, and any in-flight arrivals are
         all empty.  If ``clock`` is given (``bus.SimClock``), each measured
@@ -359,7 +383,9 @@ class MultiTenantEngine:
         interface (``deliver_until(t)`` pushing into ``queue`` via its
         subscription, ``next_delivery()``): deliveries due by the clock are
         flushed before each admission round, and an idle engine
-        fast-forwards the clock to the next arrival instead of exiting."""
+        fast-forwards the clock to the next arrival instead of exiting.
+        ``on_step(steps)`` is called after every engine step — the hook
+        the ``--obs`` serving dashboard renders from."""
         if source is not None and clock is None:
             raise ValueError(
                 "drain(source=...) needs a clock: arrivals are stamped on "
@@ -385,6 +411,8 @@ class MultiTenantEngine:
             if clock is not None:
                 clock.advance(lat)
             steps += 1
+            if on_step is not None:
+                on_step(steps)
             if steps >= max_steps:
                 raise RuntimeError("drain did not converge")
         return steps

@@ -151,7 +151,7 @@ def compare_reports(got: dict, want: dict, tol: Tolerance = Tolerance()) -> list
 
 
 def golden_replay(name: str, scheduler=None, seed: Optional[int] = None,
-                  sentinel=None):
+                  sentinel=None, obs=None):
     """Replay a golden episode under the canonical golden configuration
     (fixed seed, half tick scale, default replay ladder, fixed engine
     capacity).  Returns ``(VariationReport, scheduler)`` so callers can
@@ -159,14 +159,17 @@ def golden_replay(name: str, scheduler=None, seed: Optional[int] = None,
     ``scheduler`` must have been built at ``GOLDEN_CAPACITY``.
 
     ``sentinel`` (a ``repro.analysis.TraceSentinel``) guards the
-    steady-state replay loop — see ``ScenarioReplayer.run``."""
+    steady-state replay loop — see ``ScenarioReplayer.run``.  ``obs``
+    (a ``repro.obs.Observatory``) traces the replay on the episode's
+    virtual timeline; attaching one never changes the report."""
     if seed is None:
         seed = GOLDEN_EPISODES[name]
     trace = compile_trace(get_episode(name), seed=seed,
                           tick_scale=GOLDEN_TICK_SCALE)
     replayer = ScenarioReplayer(
         trace, scheduler=scheduler,
-        capacity=GOLDEN_CAPACITY if scheduler is None else None)
+        capacity=GOLDEN_CAPACITY if scheduler is None else None,
+        obs=obs)
     return replayer.run(sentinel=sentinel), replayer.scheduler
 
 

@@ -39,6 +39,7 @@ from repro.anytime.controller import ControllerConfig
 from repro.anytime.ladder import Ladder, Rung
 from repro.batched.scheduler import RungBucketScheduler
 from repro.bus.clock import SimClock
+from repro.obs.attribution import FrameSample
 from repro.perception.data import SceneConfig, generate_scene
 from repro.perception.fusion import ApproxTimeSynchronizer
 
@@ -286,6 +287,7 @@ class ScenarioReplayer:
         fusion_queue: int = 4,
         jitter: float = 0.06,
         depth: int = 1,
+        obs=None,
     ) -> None:
         if depth < 1:
             raise ValueError(f"depth must be >= 1 (got {depth})")
@@ -332,6 +334,18 @@ class ScenarioReplayer:
             scheduler.set_virtual(self.clock, self.cost)
         self.scheduler = scheduler
         self.fusion_queue = fusion_queue
+        # observability: bind the observatory to this episode's SimClock
+        # (spans land on the virtual timeline, so traces are byte-
+        # reproducible too) and tag each rung engine's span stream with
+        # the episode name.  Attaching an observatory is pure observation:
+        # it reads the clock and copies row fields, so the report stays
+        # byte-identical with tracing on — the golden suite asserts this.
+        self.obs = obs
+        scheduler.set_obs(obs)
+        if obs is not None:
+            obs.bind_clock(self.clock)
+            for rung_name, eng in scheduler.engines.items():
+                eng.obs_tag = f"{trace.name}/{rung_name}"
 
     def run(self, sentinel=None) -> VariationReport:
         """Replay the episode.  ``sentinel`` (a
@@ -350,6 +364,11 @@ class ScenarioReplayer:
             sched.add_stream(sid, tr.budget_s)
 
         rng = np.random.default_rng((tr.seed * 2_147_483_629 + 0x5EED) & 0x7FFFFFFF)
+        if (sentinel is not None and self.obs is not None
+                and getattr(sentinel, "tracer", None) is None):
+            # compile events observed by the sentinel land in the episode
+            # timeline as runtime-axis spans
+            sentinel.tracer = self.obs.tracer
         guard = sentinel if sentinel is not None else contextlib.nullcontext()
         with guard:
             reports = self._run_segments(tr, sched, rng)
@@ -397,6 +416,18 @@ class ScenarioReplayer:
                 res = sched.tick(
                     scenes, budgets={sid: budget for sid in scenes})
                 rows.extend(res.rows)
+                if self.obs is not None:
+                    # the replayer is the one component that knows the
+                    # injected contention level, so it builds the
+                    # attribution samples (hardware-axis grouping feature)
+                    for r in res.rows:
+                        self.obs.sample(FrameSample(
+                            latency_s=r["latency_s"], stream=r["stream"],
+                            tick=r["tick"], segment=seg.label,
+                            scenario=r["scenario"], rung=r["rung"],
+                            batch_size=r["batch_size"],
+                            work=int(r["work"]),
+                            contention=self.cost.contention))
                 now = self.clock.time()
                 for sid in scenes:
                     sync.add(sid, stamps[sid], None, now)

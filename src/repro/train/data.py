@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import queue
-from typing import Any, Iterator, Optional
+from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
 
@@ -65,24 +66,28 @@ def synthetic_batches(
 
 class PrefetchIterator:
     """Background-thread prefetch (depth-N), mirroring a production input
-    pipeline; exposes per-batch producer latency for I/O-variance analysis."""
+    pipeline; exposes per-batch producer latency for I/O-variance analysis.
 
-    def __init__(self, it: Iterator[Any], depth: int = 2) -> None:
+    ``clock`` is injectable (``bus.clock.SimClock`` compatible, like every
+    other timing site in the stack) so training-loop traces can run on
+    virtual time; it defaults to wall clock."""
+
+    def __init__(self, it: Iterator[Any], depth: int = 2,
+                 clock: Optional[Callable[[], float]] = None) -> None:
         self._it = it
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
+        self._clock = clock if clock is not None else time.perf_counter
         self.produce_times: list[float] = []
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self) -> None:
-        import time
-
         try:
             for item in self._it:
-                t0 = time.perf_counter()
+                t0 = self._clock()
                 self._q.put(item)
-                self.produce_times.append(time.perf_counter() - t0)
+                self.produce_times.append(self._clock() - t0)
         finally:
             self._q.put(self._done)
 

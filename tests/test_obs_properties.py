@@ -1,0 +1,114 @@
+"""Hypothesis property tests for the obs quantile sketches: estimates
+track ``numpy.percentile`` within the sketch's bin-width error bound on
+adversarial shapes (bimodal, heavy-tail, constant), and merging is
+associative to the bit under the fixed global bin edges."""
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import LatencySketch, P2Quantile
+
+# latencies in seconds: microseconds to tens of seconds
+lat = st.floats(min_value=2e-6, max_value=30.0, allow_nan=False,
+                allow_infinity=False)
+
+bimodal = st.lists(
+    st.one_of(st.floats(min_value=1e-3, max_value=3e-3),
+              st.floats(min_value=0.5, max_value=1.0)),
+    min_size=20, max_size=400)
+
+heavy_tail = st.lists(
+    st.floats(min_value=1e-4, max_value=1e-3), min_size=20, max_size=300,
+).flatmap(lambda body: st.lists(
+    st.floats(min_value=1.0, max_value=30.0), min_size=1, max_size=10,
+).map(lambda tail: body + tail))
+
+constant = st.floats(min_value=1e-4, max_value=1.0).flatmap(
+    lambda v: st.integers(min_value=5, max_value=200).map(lambda n: [v] * n))
+
+
+def _sketch(xs):
+    sk = LatencySketch()
+    sk.extend(xs)
+    return sk
+
+
+def _assert_within_bin_error(sk, xs, q):
+    got = sk.quantile(q)
+    want = float(np.percentile(xs, q * 100, method="inverted_cdf"))
+    # one bin of geometric width gamma, plus the half-bin midpoint offset
+    assert got <= want * sk.gamma ** 1.5 + 1e-12
+    assert got >= want / sk.gamma ** 1.5 - 1e-12
+    assert sk.quantile(0.0) <= got <= sk.quantile(1.0)
+
+
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+@given(xs=bimodal)
+@settings(max_examples=40, deadline=None)
+def test_sketch_tracks_percentile_on_bimodal(q, xs):
+    _assert_within_bin_error(_sketch(xs), xs, q)
+
+
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+@given(xs=heavy_tail)
+@settings(max_examples=40, deadline=None)
+def test_sketch_tracks_percentile_on_heavy_tail(q, xs):
+    _assert_within_bin_error(_sketch(xs), xs, q)
+
+
+@given(xs=constant)
+@settings(max_examples=30, deadline=None)
+def test_sketch_is_tight_on_constant_streams(xs):
+    sk = _sketch(xs)
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        # min/max clamping makes a constant stream exact at every quantile
+        assert sk.quantile(q) == xs[0]
+
+
+@given(a=st.lists(lat, min_size=1, max_size=100),
+       b=st.lists(lat, min_size=1, max_size=100),
+       c=st.lists(lat, min_size=1, max_size=100))
+@settings(max_examples=40, deadline=None)
+def test_sketch_merge_is_associative_and_exact(a, b, c):
+    """(A + B) + C == A + (B + C) == one sketch fed everything —
+    bit-identical histograms, the property rung/batch bucket rollups
+    rely on."""
+    sa, sb, sc = _sketch(a), _sketch(b), _sketch(c)
+    left = _sketch(a).merge(sb).merge(sc)
+    right = _sketch(b).merge(sc)
+    right = _sketch(a).merge(right)
+    whole = _sketch(a + b + c)
+    assert left.to_dict() == right.to_dict() == whole.to_dict()
+    for q in (0.5, 0.95, 0.99):
+        assert left.quantile(q) == whole.quantile(q)
+
+
+@given(xs=st.lists(lat, min_size=1, max_size=300),
+       q=st.floats(min_value=0.05, max_value=0.95))
+@settings(max_examples=40, deadline=None)
+def test_p2_stays_inside_observed_range(xs, q):
+    p = P2Quantile(q)
+    for x in xs:
+        p.update(x)
+    assert min(xs) - 1e-12 <= p.value() <= max(xs) + 1e-12
+
+
+@given(xs=st.lists(st.floats(min_value=1e-4, max_value=1.0,
+                             allow_nan=False),
+                   min_size=200, max_size=600),
+       q=st.sampled_from([0.5, 0.9]))
+@settings(max_examples=20, deadline=None)
+def test_p2_approximates_percentile_on_large_streams(xs, q):
+    p = P2Quantile(q)
+    for x in xs:
+        p.update(x)
+    want = float(np.percentile(xs, q * 100))
+    spread = max(xs) - min(xs)
+    if spread > 0 and not math.isclose(want, 0.0):
+        # P² is a coarse five-marker estimator: bound the error by a
+        # fraction of the observed spread, not a tight relative band
+        assert abs(p.value() - want) <= 0.25 * spread + 1e-9
