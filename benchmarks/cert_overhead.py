@@ -1,0 +1,65 @@
+"""Certifier wall-time: the static gate must stay cheap enough for CI.
+
+tvcert's whole-envelope sweep (three batched rungs × capacity-8
+occupancy/churn schedule, five ladder rungs, four Pallas kernels, twelve
+cost rows) is pure tracing — ``jax.make_jaxpr`` plus jaxpr walking, no
+XLA compile, no inference FLOP — so the full static build should finish
+in seconds.  The gate asserted here (and re-asserted by the tvcert CI
+job, which runs the same ``--check``): one full static certification of
+the shipped tree under 60 s on the 2-core CI container.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.analysis.cert import build_static, check, default_envelope
+
+from .common import csv_line, table
+
+BUDGET_S = 60.0                 # acceptance ceiling on 2-core CPU
+
+
+def run() -> list[dict]:
+    env = default_envelope()
+
+    t0 = time.perf_counter()
+    cert = build_static(env)
+    build_s = time.perf_counter() - t0
+
+    # the gate also pays one comparison pass; measure it where it runs
+    t0 = time.perf_counter()
+    fatal, notes = check(cert, cert)
+    check_s = time.perf_counter() - t0
+
+    n_rungs = len(env.rungs)
+    n_programs = len(cert["programs"])
+    rows = [{
+        "phase": "build_static",
+        "seconds": round(build_s, 3),
+        "programs": n_programs,
+        "rungs": n_rungs,
+        "budget_s": BUDGET_S,
+        "ok": build_s < BUDGET_S,
+    }, {
+        "phase": "check",
+        "seconds": round(check_s, 3),
+        "programs": n_programs,
+        "rungs": n_rungs,
+        "budget_s": BUDGET_S,
+        "ok": (build_s + check_s) < BUDGET_S,
+    }]
+    table(rows, "tvcert overhead (full envelope, pure tracing)")
+    csv_line("cert_overhead/build_static", build_s * 1e6,
+             f"programs={n_programs}")
+    csv_line("cert_overhead/check", check_s * 1e6,
+             f"fatal={len(fatal)},notes={len(notes)}")
+
+    assert build_s + check_s < BUDGET_S, (
+        f"full certification took {build_s + check_s:.1f}s — "
+        f"over the {BUDGET_S:.0f}s CI budget")
+    assert not fatal, f"self-check of a fresh build found: {fatal[:3]}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -35,6 +35,7 @@ MODULES = [
     "scenarios",
     "obs_overhead",
     "roofline",
+    "cert_overhead",
 ]
 
 

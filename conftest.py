@@ -2,10 +2,22 @@
 ``PYTHONPATH=src`` incantation (pytest.ini's ``pythonpath = src`` handles
 pytest >= 7; this keeps direct collection and IDE runners working too).
 
-Also registers ``--regen-golden``: the golden scenario-replay tests
-(tests/test_scenarios.py) rewrite their fixtures instead of comparing
-against them, so an *intentional* behaviour change lands as an explicit
-fixture diff in the same commit."""
+Also registers the committed-fixture regeneration flags.  The repo keeps
+three kinds of committed fixtures, each guarded by a test that compares
+the shipped tree against it:
+
+* ``--regen-golden``   — golden scenario-replay traces (tests/golden/),
+  rewritten by tests/test_scenarios.py;
+* ``--regen-baseline`` — the tvlint accepted-debt baseline
+  (analysis/baseline.json), rewritten by tests/test_analysis.py;
+* ``--regen-cert``     — the static timing certificate
+  (analysis/certificate.json), rewritten by tests/test_cert.py.
+
+``--regen-fixtures`` turns all three on at once, so an intentional
+behaviour change lands as one explicit fixture diff in the same commit:
+
+    pytest --regen-fixtures && pytest
+"""
 import sys
 from pathlib import Path
 
@@ -15,15 +27,44 @@ SRC = str(Path(__file__).resolve().parent / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+_REGEN_FLAGS = {
+    "--regen-golden": "rewrite the golden scenario-replay fixtures "
+                      "(tests/golden/) instead of asserting against them",
+    "--regen-baseline": "rewrite the tvlint baseline "
+                        "(analysis/baseline.json) instead of asserting "
+                        "the tree is lint-clean against it",
+    "--regen-cert": "rewrite the static timing certificate "
+                    "(analysis/certificate.json) instead of checking "
+                    "the shipped tree against it",
+}
+
 
 def pytest_addoption(parser):
+    for flag, help_text in _REGEN_FLAGS.items():
+        parser.addoption(flag, action="store_true", default=False,
+                         help=help_text)
     parser.addoption(
-        "--regen-golden", action="store_true", default=False,
-        help="rewrite the golden scenario-replay fixtures (tests/golden/) "
-             "instead of asserting against them",
+        "--regen-fixtures", action="store_true", default=False,
+        help="regenerate every committed fixture in one run (implies "
+             + ", ".join(_REGEN_FLAGS) + ")",
     )
+
+
+def _regen(request, flag: str) -> bool:
+    return (request.config.getoption(flag)
+            or request.config.getoption("--regen-fixtures"))
 
 
 @pytest.fixture
 def regen_golden(request):
-    return request.config.getoption("--regen-golden")
+    return _regen(request, "--regen-golden")
+
+
+@pytest.fixture
+def regen_baseline(request):
+    return _regen(request, "--regen-baseline")
+
+
+@pytest.fixture
+def regen_cert(request):
+    return _regen(request, "--regen-cert")

@@ -5,8 +5,13 @@ The analyzer is deliberately *module-local and heuristic*: it resolves
 import aliases, tracks which local names hold traced/device values and
 which hold jitted callables, and flags hazardous uses in **hot
 contexts** (syntactic loops — ``for``/``while``/comprehensions — and
-functions whose names mark them as per-tick entry points).  It does not
-chase values across modules; cross-module invariants are the runtime
+functions whose names mark them as per-tick entry points).  Within a
+module it is **one level interprocedural**: a prepass summarizes each
+local helper (does it host-sync a parameter?  call ``jax.jit`` in its
+body?  reach device math through one plain-name hop?) so TV001/TV002/
+TV005 follow the hazard through a single helper call and report at the
+*call site* with a ``via <helper>`` note.  It does not chase values
+across modules; cross-module invariants are the runtime
 ``TraceSentinel``'s job.  False positives are expected to be rare and
 are silenced either with an inline ``# tvlint: disable=TVxxx`` comment
 (for *intentional* patterns, with the reason in the comment) or by the
@@ -127,6 +132,12 @@ class _ModuleFacts(ast.NodeVisitor):
         self.donating_attrs: dict[str, tuple[int, ...]] = {}
         self.device_fn_defs: set[str] = set()     # local defs doing jnp math
         self.jit_wrapped_args: set[str] = set()   # names passed to jit/vmap
+        # interprocedural helper summaries (one hop, same module)
+        self.helper_sync_params: dict[str, set[int]] = {}  # def -> param idxs
+        self.helper_calls_jit: set[str] = set()   # defs calling jax.jit inside
+        self.device_fn_via: dict[str, str] = {}   # wrapper -> device-math callee
+        self.host_level_defs: set[str] = set()    # fence/clock orchestration
+        self._callees: dict[str, set[str]] = {}   # def -> plain-Name callees
 
     def _jit_call(self, call: ast.Call) -> bool:
         d = _dotted(call.func, self.aliases)
@@ -180,6 +191,10 @@ class _ModuleFacts(ast.NodeVisitor):
                     self.jitted_names.add(node.name)
         does_device_math = False
         host_level = False
+        params = [a.arg for a in node.args.args]
+        param_idx = {p: i for i, p in enumerate(params)}
+        sync_params: set[int] = set()
+        callees: set[str] = set()
         for sub in ast.walk(node):
             if isinstance(sub, (ast.Attribute, ast.Name)):
                 d = _dotted(sub, self.aliases)
@@ -190,12 +205,49 @@ class _ModuleFacts(ast.NodeVisitor):
                     # timestamps is host-level orchestration: it cannot be
                     # wrapped in jax.jit wholesale, so TV005 does not apply
                     host_level = True
+            if isinstance(sub, ast.Call):
+                d = _dotted(sub.func, self.aliases)
+                if d in _JIT_WRAPPERS:
+                    self.helper_calls_jit.add(node.name)
+                # helper summary: which parameters this def host-syncs
+                if (d in _SYNC_CALLS or d == "jax.device_get") and sub.args \
+                        and isinstance(sub.args[0], ast.Name) \
+                        and sub.args[0].id in param_idx:
+                    sync_params.add(param_idx[sub.args[0].id])
+                if isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in _SYNC_METHODS \
+                        and isinstance(sub.func.value, ast.Name) \
+                        and sub.func.value.id in param_idx:
+                    sync_params.add(param_idx[sub.func.value.id])
+                if isinstance(sub.func, ast.Name):
+                    callees.add(sub.func.id)
         if does_device_math and not host_level:
             self.device_fn_defs.add(node.name)
+        if host_level:
+            self.host_level_defs.add(node.name)
+        if sync_params:
+            self.helper_sync_params[node.name] = sync_params
+        self._callees[node.name] = callees
         self.generic_visit(node)
 
     visit_FunctionDef = _visit_def
     visit_AsyncFunctionDef = _visit_def
+
+    def finalize(self) -> None:
+        """Resolve one-hop transitivity after the whole module is seen
+        (helpers may be defined before their callees): a plain wrapper
+        whose body calls a local device-math def *reaches* device math,
+        unless the callee is compiled (jitted or handed to jit/vmap) —
+        calling a compiled function per tick is exactly right."""
+        for name, callees in self._callees.items():
+            if name in self.device_fn_defs or name in self.host_level_defs:
+                continue
+            for c in sorted(callees):
+                if (c != name and c in self.device_fn_defs
+                        and c not in self.jitted_names
+                        and c not in self.jit_wrapped_args):
+                    self.device_fn_via[name] = c
+                    break
 
 
 class _Analyzer(ast.NodeVisitor):
@@ -446,9 +498,34 @@ class _Analyzer(ast.NodeVisitor):
             self._emit("TV001", node,
                        f".{node.func.attr}() on a traced value inside a "
                        "loop blocks on the device per iteration")
+            return
+        # interprocedural: a local helper that host-syncs one of its
+        # parameters, handed a traced value at that position
+        if isinstance(node.func, ast.Name) \
+                and node.func.id not in self.facts.jitted_names:
+            sync_params = self.facts.helper_sync_params.get(node.func.id)
+            if sync_params:
+                for i, a in enumerate(node.args):
+                    if i in sync_params and self._is_device_expr(a):
+                        self._emit(
+                            "TV001", node,
+                            f"traced value blocks on the device per "
+                            f"iteration via {node.func.id}(): its body "
+                            f"host-syncs parameter {i}")
+                        break
 
     def _check_tv002_jit(self, node: ast.Call, d: Optional[str]) -> None:
         if d not in _JIT_WRAPPERS:
+            # interprocedural: invoking a local helper that calls jax.jit
+            # in its body builds a fresh closure (and compiles) per call
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in self.facts.helper_calls_jit \
+                    and not self._jit_ctx \
+                    and (self._loop_depth or (self._hot() and self._scope)):
+                self._emit(
+                    "TV002", node,
+                    f"per-tick retrace via {node.func.id}(): its body "
+                    "calls jax.jit, so every invocation compiles afresh")
             return
         if self._loop_depth or (self._hot() and self._scope):
             self._emit("TV002", node,
@@ -521,8 +598,13 @@ class _Analyzer(ast.NodeVisitor):
         if not isinstance(node.func, ast.Name):
             return
         name = node.func.id
+        via: Optional[str] = None
         if name not in self.facts.device_fn_defs:
-            return
+            # interprocedural: a plain wrapper reaching device math one
+            # plain-name hop down
+            via = self.facts.device_fn_via.get(name)
+            if via is None:
+                return
         if name in self.facts.jitted_names \
                 or name in self.facts.jit_wrapped_args:
             return
@@ -538,9 +620,14 @@ class _Analyzer(ast.NodeVisitor):
                 if isinstance(t, ast.Name) \
                         and t.id in self.facts.jit_wrapped_args:
                     return
-        self._emit("TV005", node,
-                   f"{name}() performs device math but is never jitted: "
-                   "per-tick calls dispatch op-by-op")
+        if via is not None:
+            self._emit("TV005", node,
+                       f"{name}() reaches device math via {via}() but is "
+                       "never jitted: per-tick calls dispatch op-by-op")
+        else:
+            self._emit("TV005", node,
+                       f"{name}() performs device math but is never jitted: "
+                       "per-tick calls dispatch op-by-op")
 
     # ------------------------------------------------ TV006 -----------
     @staticmethod
@@ -641,6 +728,7 @@ def analyze_module(source: str, path: str) -> list[Finding]:
     tree = ast.parse(source, filename=path)
     facts = _ModuleFacts(_collect_aliases(tree))
     facts.visit(tree)
+    facts.finalize()
     analyzer = _Analyzer(path, facts)
     analyzer.visit(tree)
     analyzer.findings.sort(key=lambda f: (f.line, f.col, f.rule))

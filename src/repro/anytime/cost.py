@@ -35,7 +35,8 @@ from repro.perception.data import SCENARIOS
 
 from .ladder import Ladder, Rung
 
-__all__ = ["SceneFeatures", "RungCostModel", "LadderCostModel"]
+__all__ = ["SceneFeatures", "RungCostModel", "LadderCostModel",
+           "cold_start_prior_table"]
 
 # bright 8×8 cells one object contributes to the proposal map, roughly
 _CELLS_PER_OBJECT = 5.0
@@ -211,6 +212,29 @@ class RungCostModel:
         p = self._batch_step.predict(feats.batch_size)
         floor = self.prior_cv * max(p.mean, 0.0)
         return Prediction(p.mean, max(p.std, floor))
+
+
+def cold_start_prior_table(rungs, batch_sizes, depth: float = 1.0,
+                           prior_cv: float = 0.25) -> dict:
+    """Untrained per-(rung, batch-size) latency priors, in seconds.
+
+    For every calibrated rung × batch size, the cold-start batched
+    prediction (``RungCostModel.predict`` with zero batched
+    observations): single-frame calibrated mean × batch size × depth.
+    The static certifier (``repro.analysis.cert``) commits these next to
+    its roofline floors — the drift gate compares ``prior / floor`` over
+    time, so a model change that shifts static FLOPs without a matching
+    recalibration is caught before any frame runs.  Raises on an
+    uncalibrated rung, same as ``RungCostModel``.
+    """
+    table = {}
+    for rung in rungs:
+        model = RungCostModel(rung, prior_cv=prior_cv)
+        for b in batch_sizes:
+            feats = SceneFeatures(batch_size=float(b), batched=True,
+                                  pipeline_depth=depth)
+            table[(rung.name, int(b))] = model.predict(feats).mean
+    return table
 
 
 class LadderCostModel:

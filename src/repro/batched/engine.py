@@ -162,6 +162,12 @@ class BatchedPerceptionEngine:
         self._span_anchor: Optional[float] = None
 
     @property
+    def executor(self) -> PipelinedExecutor:
+        """The underlying executor — the static certifier instruments its
+        program inventory; everything else should go through the engine."""
+        return self._exec
+
+    @property
     def trace_count(self) -> int:
         """Traces of the fused step — must stay 1 after any churn."""
         return self._exec.step_traces

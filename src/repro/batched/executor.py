@@ -91,6 +91,15 @@ class PipelinedExecutor:
     returns the oldest.
     """
 
+    # program inventory: every jitted hot-path callable this executor
+    # dispatches, by short name, with its declared buffer donation.  The
+    # static certifier (repro.analysis.cert) enumerates PROGRAMS to
+    # instrument them and cross-checks DONATED_ARGNUMS against the
+    # donated_invars the traced jaxpr actually carries.
+    PROGRAMS = ("step", "assemble", "pack", "slot_update")
+    DONATED_ARGNUMS = {"step": (), "assemble": (), "pack": (),
+                       "slot_update": (0,)}
+
     def __init__(
         self,
         step_fn,
@@ -143,6 +152,23 @@ class PipelinedExecutor:
         self._raw = jnp.zeros((capacity, *self.image_shape), jnp.float32)
         self._queue: deque[_InFlight] = deque()
         self._seq = 0
+
+    def programs(self) -> dict:
+        """The live jitted program per short name in ``PROGRAMS``."""
+        return {name: getattr(self, f"_{name}") for name in self.PROGRAMS}
+
+    def instrument(self, wrap) -> dict:
+        """Replace every jitted program with ``wrap(name, fn)`` and return
+        the wrappers keyed by short name.  The certifier passes recorders
+        that trace (``jax.make_jaxpr``) instead of executing, turning a
+        full engine sweep into a compile-free static analysis; tests can
+        pass counting or fault-injecting wrappers the same way."""
+        out = {}
+        for name, fn in self.programs().items():
+            wrapped = wrap(name, fn)
+            setattr(self, f"_{name}", wrapped)
+            out[name] = wrapped
+        return out
 
     # ---------------- resident-batch maintenance ----------------
     def _zero(self):

@@ -5,4 +5,41 @@ ops.py (jit'd wrappers) and ref.py (pure-jnp oracles).
 """
 from .ops import decode_attention, flash_attention, mamba2_ssd, rwkv6_wkv
 
-__all__ = ["decode_attention", "flash_attention", "mamba2_ssd", "rwkv6_wkv"]
+__all__ = ["decode_attention", "flash_attention", "mamba2_ssd", "rwkv6_wkv",
+           "CERT_SHAPES"]
+
+# Canonical certification avals per public kernel wrapper: (dtype_short,
+# shape) per positional argument.  The static certifier
+# (``repro.analysis.cert``) traces each wrapper at exactly these avals to
+# count FLOPs/bytes and scan for host-interaction primitives; shapes are
+# drawn from the validated test sweeps (tests/test_kernels.py) and must
+# satisfy each kernel's block constraints (e.g. flash attention's seq
+# divisible by its 128-wide blocks).
+CERT_SHAPES = {
+    "flash_attention": (
+        ("f32", (1, 128, 4, 32)),          # q (B, S, H, D)
+        ("f32", (1, 128, 4, 32)),          # k
+        ("f32", (1, 128, 4, 32)),          # v
+    ),
+    "decode_attention": (
+        ("f32", (2, 4, 32)),               # q (B, H, D)
+        ("f32", (2, 128, 4, 32)),          # k cache (B, C, K, D)
+        ("f32", (2, 128, 4, 32)),          # v cache
+        ("i32", (128,)),                   # ring-buffer positions
+        ("i32", ()),                       # next_pos
+    ),
+    "rwkv6_wkv": (
+        ("f32", (1, 64, 2, 16)),           # r (B, T, H, D)
+        ("f32", (1, 64, 2, 16)),           # k
+        ("f32", (1, 64, 2, 16)),           # v
+        ("f32", (1, 64, 2, 16)),           # logw
+        ("f32", (2, 16)),                  # u (H, D)
+    ),
+    "mamba2_ssd": (
+        ("f32", (1, 64, 8, 16)),           # x (B, S, H, P); H % head_block
+        ("f32", (1, 64, 8)),               # dt
+        ("f32", (8,)),                     # a
+        ("f32", (1, 64, 16)),              # B (B, S, N)
+        ("f32", (1, 64, 16)),              # C
+    ),
+}
