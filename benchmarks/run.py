@@ -36,6 +36,7 @@ MODULES = [
     "obs_overhead",
     "roofline",
     "cert_overhead",
+    "fleet",
 ]
 
 

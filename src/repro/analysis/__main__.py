@@ -24,7 +24,7 @@ from .lint import lint_paths, write_report
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="tvlint: static timing-hazard analysis (TV001-TV006)")
+        description="tvlint: static timing-hazard analysis (TV001-TV007)")
     ap.add_argument("paths", nargs="+", type=Path,
                     help="files or directories to lint")
     ap.add_argument("--root", type=Path, default=None,

@@ -115,6 +115,26 @@ def build_static(env: InputEnvelope | None = None,
     cost_table = [_cost_row(point, b, env, hw)
                   for point in env.rungs for b in env.batch_sizes]
 
+    # fleet sharding: at data=K every slot-batch program runs as one
+    # SPMD executable over K devices.  jit signatures key on *global*
+    # avals, so the per-program signatures above certify every declared
+    # K unchanged; the K-specific claim is the slot-block partition —
+    # capacity must divide so each shard owns an equal contiguous block
+    # (slot_batch_spec raises otherwise), checked here statically.
+    fleet = []
+    for k in env.fleet_shards:
+        divides = env.capacity % k == 0
+        fleet.append({
+            "data_shards": int(k),
+            "slot_spec": "data" if k > 1 else None,
+            "slots_per_shard": env.capacity // k if divides else None,
+        })
+        if not divides:
+            violations.append([
+                "fleet/slot_batch_spec",
+                f"capacity {env.capacity} not divisible by data axis {k}",
+                f"data={k}"])
+
     return {
         "version": CERT_VERSION,
         "envelope_hash": envelope_hash(env),
@@ -123,6 +143,7 @@ def build_static(env: InputEnvelope | None = None,
         "programs": programs,
         "violations": violations,
         "cost_table": cost_table,
+        "fleet": fleet,
     }
 
 
@@ -229,6 +250,12 @@ def check(committed: dict, fresh: dict, tol: float = DRIFT_TOL
             "HARDWARE model changed "
             f"({committed.get('hardware', {}).get('name')} → "
             f"{fresh['hardware']['name']}) — review and --regen")
+    if committed.get("fleet") != fresh.get("fleet"):
+        fatal.append(
+            "FLEET slot-block partition changed "
+            f"({committed.get('fleet')} → {fresh.get('fleet')}) — the "
+            "sharded serving layout is part of the envelope claim; "
+            "review and --regen")
 
     old_p = committed.get("programs", {})
     new_p = fresh["programs"]

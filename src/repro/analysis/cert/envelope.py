@@ -89,6 +89,12 @@ class InputEnvelope:
     ladder_rungs: tuple         # RungPoint — anytime single-frame rungs
     kernels: tuple              # KernelPoint
     churn: bool = True          # exercise join/leave/carve-out between ticks
+    # fleet sharding: declared data-axis shard counts the serving meshes
+    # may take.  jit signatures key on *global* avals, so the committed
+    # per-program signatures hold at every declared K; what each K adds
+    # is a slot-block partition (capacity/K slots per device), certified
+    # by the divisibility check in the certificate's ``fleet`` section.
+    fleet_shards: tuple = (1, 2)
 
     def describe(self) -> dict:
         """Canonical JSON-serializable description (hash input)."""
@@ -101,6 +107,7 @@ class InputEnvelope:
             "ladder_rungs": [r.to_dict() for r in self.ladder_rungs],
             "kernels": [k.to_dict() for k in self.kernels],
             "churn": self.churn,
+            "fleet_shards": list(self.fleet_shards),
         }
 
 

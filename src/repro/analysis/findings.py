@@ -83,6 +83,15 @@ RULES: dict[str, Rule] = {
             "interval — otherwise the measurement records dispatch, not "
             "execution (see core.timing.StageTimer)",
         ),
+        Rule(
+            "TV007",
+            "data",
+            "mutable default argument",
+            "default expressions evaluate ONCE at def time: a mutable "
+            "default (or constructed config instance) is silently shared "
+            "by every call and every instance — use `arg=None` and build "
+            "the fresh value inside the body",
+        ),
     ]
 }
 

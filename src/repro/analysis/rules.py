@@ -46,6 +46,12 @@ Rules (axis in brackets):
   ``with tracer.span(..., fence=...)`` context manager (the obs layer's
   fenced timing site) counts as a fence: it calls
   ``jax.block_until_ready`` before closing the span.
+* **TV007 [data]** — a mutable default argument: a list/dict/set display
+  or a constructor call (``cfg: Config = Config()``) in a parameter
+  default evaluates once at ``def`` time, so every call — and every
+  scheduler/engine built through it — aliases the same instance.
+  Constructor calls to known-immutable builtins (``tuple``,
+  ``frozenset``, numbers, strings) are exempt.
 """
 from __future__ import annotations
 
@@ -85,6 +91,13 @@ _STDLIB_RANDOM = {
 _SEEDED_SINKS = {"numpy.random.default_rng", "jax.random.PRNGKey",
                  "jax.random.key", "numpy.random.seed", "random.seed"}
 _STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "itemsize"}
+# constructor calls allowed in parameter defaults: they build immutable
+# values, so sharing the def-time instance is harmless
+_IMMUTABLE_DEFAULT_CALLS = {
+    "tuple", "frozenset", "int", "float", "str", "bytes", "bool", "complex",
+}
+_MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set,
+                     ast.ListComp, ast.DictComp, ast.SetComp)
 
 
 def _dotted(node: ast.AST, aliases: dict[str, str]) -> Optional[str]:
@@ -358,6 +371,7 @@ class _Analyzer(ast.NodeVisitor):
                     devs.add(arg.arg)
         self._device_vars.append(devs)
         self._fn_stack.append(node.name)
+        self._check_tv007(node)
         jitted_def = node.name in self.facts.jitted_names
         if jitted_def:
             self._jit_ctx += 1
@@ -386,6 +400,35 @@ class _Analyzer(ast.NodeVisitor):
         super().generic_visit(node)
         if is_stmt:
             self._stmt_stack.pop()
+
+    # ------------------------------------------------ TV007 -----------
+    def _check_tv007(self, fn) -> None:
+        """Mutable (or constructed) parameter defaults: evaluated once at
+        def time and aliased by every call."""
+        defaults = list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            self._stmt_stack.append(fn)   # fingerprint the whole def
+            try:
+                if isinstance(d, _MUTABLE_DISPLAYS):
+                    kind = type(d).__name__.replace("Comp", " comprehension") \
+                        .lower()
+                    self._emit(
+                        "TV007", d,
+                        f"mutable default ({kind} display) is evaluated "
+                        "once at def time and shared by every call — use "
+                        "a None sentinel")
+                elif isinstance(d, ast.Call):
+                    name = _dotted(d.func, self.aliases) or "<call>"
+                    if name in _IMMUTABLE_DEFAULT_CALLS:
+                        continue
+                    self._emit(
+                        "TV007", d,
+                        f"default {name}() is constructed once at def time "
+                        "and shared by every call — use a None sentinel and "
+                        "construct per call")
+            finally:
+                self._stmt_stack.pop()
 
     # ------------------------------------------------ loops -----------
     def _enter_loop(self, node) -> None:

@@ -74,8 +74,9 @@ class ContractController:
         self,
         ladder: Ladder,
         cost: Optional[LadderCostModel] = None,
-        cfg: ControllerConfig = ControllerConfig(),
+        cfg: Optional[ControllerConfig] = None,
     ) -> None:
+        cfg = cfg if cfg is not None else ControllerConfig()
         self.ladder = ladder
         self.cost = cost if cost is not None else LadderCostModel(ladder)
         self.cfg = cfg
@@ -88,8 +89,11 @@ class ContractController:
     def current(self) -> Rung:
         return self.ladder[self._idx]
 
-    def select(self, budget_s: float, feats: SceneFeatures = SceneFeatures()) -> Selection:
+    def select(self, budget_s: float,
+               feats: Optional[SceneFeatures] = None) -> Selection:
         """Choose the rung for the next frame given its residual budget."""
+        if feats is None:
+            feats = SceneFeatures()
         if self.cfg.pipeline_depth > 1.0 and feats.pipeline_depth == 1.0:
             feats = dataclasses.replace(
                 feats, pipeline_depth=self.cfg.pipeline_depth)
@@ -146,12 +150,12 @@ class FixedController:
         self,
         ladder: Ladder,
         rung_name: Optional[str] = None,
-        cfg: ControllerConfig = ControllerConfig(),
+        cfg: Optional[ControllerConfig] = None,
     ) -> None:
         self.ladder = ladder
         self._idx = 0 if rung_name is None else ladder.index(rung_name)
         self.cost = LadderCostModel(ladder)
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else ControllerConfig()
         self.switches = 0
         self.selections: list[Selection] = []
 
@@ -159,7 +163,10 @@ class FixedController:
     def current(self) -> Rung:
         return self.ladder[self._idx]
 
-    def select(self, budget_s: float, feats: SceneFeatures = SceneFeatures()) -> Selection:
+    def select(self, budget_s: float,
+               feats: Optional[SceneFeatures] = None) -> Selection:
+        if feats is None:
+            feats = SceneFeatures()
         rung = self.ladder[self._idx]
         p = self.cost.predict(rung.name, feats)
         fits = p.quantile(self.cfg.quantile) <= budget_s

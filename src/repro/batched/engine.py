@@ -44,6 +44,7 @@ from typing import Callable, Dict, Mapping, Optional
 
 import jax
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.bus.clock import SimClock
 from repro.core.timing import (STAGE_AXES, StageRecord, StageTimer,
@@ -97,6 +98,7 @@ class BatchedPerceptionEngine:
         depth: int = 1,
         obs=None,
         obs_tag: str = "",
+        mesh: Optional[Mesh] = None,
         **det_kw,
     ) -> None:
         if capacity < 1:
@@ -146,9 +148,21 @@ class BatchedPerceptionEngine:
         step_fn = jax.vmap(
             lambda raw: built.infer(preprocess_device(raw, built.scale, built.pad))
         )
+        # fleet sharding: the executor carries the slot batch (and every
+        # program output) as a NamedSharding over the mesh's data axis;
+        # the engine seats streams into per-shard slot blocks so a
+        # stream's frames always land on one device's shard
+        self.mesh = mesh
         self._exec = PipelinedExecutor(step_fn, capacity, image_shape,
-                                       depth=depth)
-        self._free: deque[int] = deque(range(capacity))
+                                       depth=depth, mesh=mesh)
+        self.n_shards = self._exec.n_shards
+        self._slots_per_shard = capacity // self.n_shards
+        # one FIFO free-list per shard; with one shard this is exactly
+        # the historical single deque(range(capacity))
+        self._free: list[deque[int]] = [
+            deque(range(k * self._slots_per_shard,
+                        (k + 1) * self._slots_per_shard))
+            for k in range(self.n_shards)]
         self.active: Dict[str, BatchedStreamState] = {}
         self.ticks = 0
         self.tick_log: list[tuple[int, float]] = []   # (n_active, latency)
@@ -191,24 +205,56 @@ class BatchedPerceptionEngine:
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return sum(len(d) for d in self._free)
 
     @property
     def in_flight(self) -> int:
         return self._exec.pending
 
-    def join(self, stream_id: str) -> BatchedStreamState:
+    @property
+    def slots_per_shard(self) -> int:
+        return self._slots_per_shard
+
+    def shard_of(self, stream_id: str) -> int:
+        """Data shard whose slot block seats this stream (0 on 1-shard)."""
+        return self._exec.shard_of_slot(self.active[stream_id].slot)
+
+    def shard_occupancy(self) -> list[int]:
+        """Seated streams per data shard — the fleet scheduler's skew
+        signal for cross-shard migration."""
+        return [self._slots_per_shard - len(self._free[k])
+                for k in range(self.n_shards)]
+
+    def join(self, stream_id: str,
+             shard: Optional[int] = None) -> BatchedStreamState:
         """Seat a stream in a free slot.  Raises when the batch is full.
         The slot's device buffer is already blank (slots are blanked on
-        leave and at construction), so joining is pure bookkeeping."""
+        leave and at construction), so joining is pure bookkeeping.
+
+        ``shard`` pins the stream to one data shard's slot block (the
+        fleet placer's seat choice); by default the least-occupied shard
+        with a free slot wins (ties → lowest index), which on a 1-shard
+        engine reduces to the historical single FIFO free list."""
         if stream_id in self.active:
             raise ValueError(f"stream {stream_id!r} is already seated")
-        if not self._free:
-            raise RuntimeError(
-                f"no free slot (capacity {self.capacity}, "
-                f"{self.n_active} active)"
-            )
-        slot = self._free.popleft()
+        if shard is None:
+            candidates = [k for k in range(self.n_shards) if self._free[k]]
+            if not candidates:
+                raise RuntimeError(
+                    f"no free slot (capacity {self.capacity}, "
+                    f"{self.n_active} active)"
+                )
+            shard = min(candidates, key=lambda k: (-len(self._free[k]), k))
+        else:
+            if not 0 <= shard < self.n_shards:
+                raise ValueError(
+                    f"shard {shard} out of range: mesh provides "
+                    f"{self.n_shards} data shard(s)")
+            if not self._free[shard]:
+                raise RuntimeError(
+                    f"no free slot in shard {shard} "
+                    f"({self._slots_per_shard} slots, all seated)")
+        slot = self._free[shard].popleft()
         st = BatchedStreamState(stream_id=stream_id, slot=slot)
         self.active[stream_id] = st
         return st
@@ -222,7 +268,28 @@ class BatchedPerceptionEngine:
         stops here — the departed stream's state object is gone."""
         st = self.active.pop(stream_id)
         self._exec.set_slot(st.slot, None)
-        self._free.append(st.slot)
+        self._free[self._exec.shard_of_slot(st.slot)].append(st.slot)
+        return st
+
+    def migrate(self, stream_id: str, shard: int) -> BatchedStreamState:
+        """Move a seated stream to another shard's slot block (carve out
+        the old slot, seat into the new shard), preserving the stream's
+        recorder/frame accounting.  The stream's next frame uploads to
+        the new slot; shapes never change, so no retrace."""
+        st = self.active[stream_id]
+        old = self._exec.shard_of_slot(st.slot)
+        if shard == old:
+            return st
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(
+                f"shard {shard} out of range: mesh provides "
+                f"{self.n_shards} data shard(s)")
+        if not self._free[shard]:
+            raise RuntimeError(f"no free slot in shard {shard}")
+        new_slot = self._free[shard].popleft()
+        self._exec.set_slot(st.slot, None)
+        self._free[old].append(st.slot)
+        st.slot = new_slot
         return st
 
     def reset(self) -> None:
@@ -232,7 +299,10 @@ class BatchedPerceptionEngine:
         reset engine behaves identically to a fresh one.  In-flight
         pipelined work is *discarded*, not drained."""
         self.active.clear()
-        self._free = deque(range(self.capacity))
+        self._free = [
+            deque(range(k * self._slots_per_shard,
+                        (k + 1) * self._slots_per_shard))
+            for k in range(self.n_shards)]
         self._exec.reset()
         self.ticks = 0
         self.tick_log.clear()
@@ -423,18 +493,21 @@ class BatchedPerceptionEngine:
     # ---------------- shared accounting ----------------
     def _account(self, rec, snapshot, outputs, n_served):
         if self.stage_cost is not None:
-            # replace measured wall-clock stage times with the modeled
-            # per-(stage, batch-size, work) durations; post work is the
-            # tick's total proposal count (the paper's post-time driver)
-            work = float(sum(
-                getattr(out, "num_proposals", 0.0) or 0.0
-                for out in outputs.values()))
-            rec.stages = {
-                "read": self.stage_cost("read", n_served, 0.0),
-                "inference": self.stage_cost("inference", n_served, 0.0),
-                "post_processing": self.stage_cost(
-                    "post_processing", n_served, work),
-            }
+            if self.n_shards > 1:
+                rec.stages = self._modeled_stages_sharded(snapshot, outputs)
+            else:
+                # replace measured wall-clock stage times with the modeled
+                # per-(stage, batch-size, work) durations; post work is the
+                # tick's total proposal count (the paper's post-time driver)
+                work = float(sum(
+                    getattr(out, "num_proposals", 0.0) or 0.0
+                    for out in outputs.values()))
+                rec.stages = {
+                    "read": self.stage_cost("read", n_served, 0.0),
+                    "inference": self.stage_cost("inference", n_served, 0.0),
+                    "post_processing": self.stage_cost(
+                        "post_processing", n_served, work),
+                }
         rec.meta["n_active"] = float(self.n_active)
         rec.meta["batch_size"] = float(n_served)
         if self.clock is not None:
@@ -445,7 +518,7 @@ class BatchedPerceptionEngine:
         self.tick_log.append((n_served, lat))
         self.recorder.add(rec)
         if self.obs is not None:
-            self._emit_tick_spans(rec, n_served)
+            self._emit_tick_spans(rec, n_served, snapshot)
         for sid, _slot in snapshot:
             st = self.active.get(sid)
             if st is None:
@@ -454,7 +527,34 @@ class BatchedPerceptionEngine:
             st.frames += 1
             st.last_output = outputs[sid]
 
-    def _emit_tick_spans(self, rec: StageRecord, n_served: int) -> None:
+    def _modeled_stages_sharded(self, snapshot, outputs):
+        """Virtual-time stage model on a multi-shard mesh: every shard
+        serves its own slice of the slot batch in parallel, so each
+        stage costs what its *slowest* shard costs (max over shards,
+        evaluated at that shard's served count and proposal work).
+        Shards are visited in ascending index so the seeded stage-cost
+        RNG draw order stays deterministic across replays."""
+        per: dict[int, list[str]] = {}
+        for sid, slot in snapshot:
+            per.setdefault(self._exec.shard_of_slot(slot), []).append(sid)
+        stages = {"read": 0.0, "inference": 0.0, "post_processing": 0.0}
+        for shard in sorted(per):
+            sids = per[shard]
+            n = len(sids)
+            work = float(sum(
+                getattr(outputs[sid], "num_proposals", 0.0) or 0.0
+                for sid in sids))
+            stages["read"] = max(
+                stages["read"], self.stage_cost("read", n, 0.0))
+            stages["inference"] = max(
+                stages["inference"], self.stage_cost("inference", n, 0.0))
+            stages["post_processing"] = max(
+                stages["post_processing"],
+                self.stage_cost("post_processing", n, work))
+        return stages
+
+    def _emit_tick_spans(self, rec: StageRecord, n_served: int,
+                         snapshot) -> None:
         """Lay this tick's stages on the observatory timeline.
 
         The tick span ends at the tick's completion time — virtual time
@@ -462,7 +562,9 @@ class BatchedPerceptionEngine:
         by ``_account``), the observatory clock otherwise — and the stage
         children tile it in recorded order.  ``track`` cycles with
         pipeline depth so overlapped ticks render on parallel Perfetto
-        rows instead of as malformed nesting."""
+        rows instead of as malformed nesting.  On a multi-shard mesh a
+        per-shard ``shard_serve`` child rides under the tick span,
+        tagged with the shard id and that shard's served count."""
         obs = self.obs
         e2e = rec.end_to_end
         t_end = rec.meta.get("t_virtual")
@@ -483,6 +585,16 @@ class BatchedPerceptionEngine:
                        axis=STAGE_AXES.get(name, "end_to_end"),
                        track=track, parent=parent.seq)
             t += dur
+        if self.n_shards > 1:
+            served: dict[int, int] = {}
+            for _sid, slot in snapshot:
+                k = self._exec.shard_of_slot(slot)
+                served[k] = served.get(k, 0) + 1
+            for k in sorted(served):
+                obs.record("shard_serve", t0, t_end, stream=stream,
+                           tick=self.ticks, rung=rung,
+                           batch_size=served[k], axis="hardware",
+                           track=track, parent=parent.seq, shard=k)
 
     # ---------------- reporting ----------------
     def _latency_series(self, recorder: TimelineRecorder) -> np.ndarray:

@@ -41,6 +41,16 @@ output tree — the single-readback contract replacing the per-leaf
 ``np.asarray`` walks.  ``payload`` riding on each submit is echoed back
 on drain so callers can re-associate a result with the (stale) tick that
 produced it: at depth k, a drained result is k−1 ticks old.
+
+**Fleet sharding** (``mesh=``): with a ``jax.sharding.Mesh`` carrying a
+``data`` axis, the resident raw batch, the cached zero batch, and every
+program output carry a ``NamedSharding`` splitting the slot dim across
+the mesh — shard *k* owns the contiguous slot block
+``[k·capacity/K, (k+1)·capacity/K)``.  The programs themselves are
+unchanged (GSPMD partitions them from the declared ``out_shardings``),
+so trace counts, donation, and the dirty-slot upload contract all hold
+per shard exactly as on one device; a 1-device mesh is the identical
+program and bitwise-identical outputs.
 """
 from __future__ import annotations
 
@@ -52,6 +62,9 @@ from typing import Any, Mapping, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import data_shards, slot_batch_spec
 
 __all__ = ["Drained", "PipelinedExecutor"]
 
@@ -106,6 +119,7 @@ class PipelinedExecutor:
         capacity: int,
         image_shape: tuple[int, int, int],
         depth: int = 1,
+        mesh: Optional[Mesh] = None,
     ) -> None:
         if depth < 1:
             raise ValueError(f"depth must be >= 1 (got {depth})")
@@ -115,6 +129,18 @@ class PipelinedExecutor:
         self.image_shape = tuple(image_shape)
         self.depth = depth
         self.frame_bytes = int(np.prod(self.image_shape)) * 4   # f32
+        self.mesh = mesh
+        self.n_shards = data_shards(mesh)
+        # slot-dim sharding for the resident batch and (as a tree prefix)
+        # every program output; P() on a plain/1-device setup
+        self._batch_sharding = (
+            NamedSharding(mesh, slot_batch_spec(mesh, capacity))
+            if mesh is not None else None)
+        # per-frame uploads (no slot dim) replicate across the mesh: a
+        # plain device_put would commit them to device 0 only, and jit
+        # rejects arguments committed to mismatched device sets
+        self._replicated = (NamedSharding(mesh, P())
+                            if mesh is not None else None)
 
         # trace counters: a recompile of any program — which static
         # shapes are supposed to rule out — is observable
@@ -143,15 +169,35 @@ class PipelinedExecutor:
             self.update_traces += 1
             return raw.at[slot].set(frame)
 
-        self._step = jax.jit(counted_step)
-        self._assemble = jax.jit(counted_assemble)
-        self._pack = jax.jit(counted_pack)
+        # in mesh mode, pin every program's output to the slot-dim
+        # sharding (a single sharding is a tree prefix, so the step's
+        # whole output tree — every leaf leads with the slot dim — shards
+        # identically); without it, pack's stack of replicated per-frame
+        # uploads would leave the resident batch replicated and the fused
+        # step unpartitioned
+        shard_kw = ({"out_shardings": self._batch_sharding}
+                    if self._batch_sharding is not None else {})
+        self._step = jax.jit(counted_step, **shard_kw)
+        self._assemble = jax.jit(counted_assemble, **shard_kw)
+        self._pack = jax.jit(counted_pack, **shard_kw)
         # donation: carve-outs mutate the resident batch in place
-        self._slot_update = jax.jit(counted_update, donate_argnums=(0,))
+        self._slot_update = jax.jit(counted_update, donate_argnums=(0,),
+                                    **shard_kw)
         self._zero_frame = None       # cached device zeros, made lazily
-        self._raw = jnp.zeros((capacity, *self.image_shape), jnp.float32)
+        self._raw = self._zeros_batch()
         self._queue: deque[_InFlight] = deque()
         self._seq = 0
+
+    def _zeros_batch(self):
+        """A blank resident batch, carrying the mesh sharding when set."""
+        z = jnp.zeros((self.capacity, *self.image_shape), jnp.float32)
+        if self._batch_sharding is not None:
+            z = jax.device_put(z, self._batch_sharding)
+        return z
+
+    def shard_of_slot(self, slot: int) -> int:
+        """Which mesh shard owns a slot (contiguous block partition)."""
+        return slot // (self.capacity // self.n_shards)
 
     def programs(self) -> dict:
         """The live jitted program per short name in ``PROGRAMS``."""
@@ -171,9 +217,16 @@ class PipelinedExecutor:
         return out
 
     # ---------------- resident-batch maintenance ----------------
+    def _put(self, x):
+        """Host→device upload of a per-frame (or scalar) value, on the
+        mesh's full device set when sharded."""
+        if self._replicated is not None:
+            return jax.device_put(x, self._replicated)
+        return jax.device_put(x)
+
     def _zero(self):
         if self._zero_frame is None:
-            self._zero_frame = jax.device_put(
+            self._zero_frame = self._put(
                 np.zeros(self.image_shape, np.float32))
         return self._zero_frame
 
@@ -200,13 +253,13 @@ class PipelinedExecutor:
         # slot index as a device int32 (matching warmup's aval) so the
         # carve-out is also clean under jax.transfer_guard("disallow")
         self._raw = self._slot_update(
-            self._raw, jax.device_put(np.int32(slot)),
-            jax.device_put(f) if isinstance(f, np.ndarray) else f)
+            self._raw, self._put(np.int32(slot)),
+            self._put(f) if isinstance(f, np.ndarray) else f)
 
     def reset(self) -> None:
         """Drop all in-flight work and blank the resident batch."""
         self._queue.clear()
-        self._raw = jnp.zeros((self.capacity, *self.image_shape), jnp.float32)
+        self._raw = self._zeros_batch()
 
     def warmup(self) -> None:
         """Trace + compile every jitted program on throwaway buffers so
@@ -214,15 +267,18 @@ class PipelinedExecutor:
         multi-second XLA outlier.  The executor owns the program
         inventory, so a new fast path added here cannot be forgotten by
         callers' warmups.  Resident slot contents are untouched."""
-        zeros = jnp.zeros((self.capacity, *self.image_shape), jnp.float32)
+        # sharded like the live resident batch, so the warmed executables
+        # are exactly the ones the tick path replays (jit caches on input
+        # shardings as well as avals)
+        zeros = self._zeros_batch()
         raw = self._assemble(zeros,
-                             jax.device_put(np.zeros(self.capacity, bool)),
+                             self._put(np.zeros(self.capacity, bool)),
                              *[self._zero()] * self.capacity)
         self._pack(*[self._zero()] * self.capacity)
         jax.block_until_ready(self._step(raw))
         # same avals as set_slot's call (device int32 slot), so the carve
         #-out path warms exactly the executable set_slot will replay
-        self._slot_update(zeros, jax.device_put(np.int32(0)),
+        self._slot_update(self._zeros_batch(), self._put(np.int32(0)),
                           self._zero())             # donates the throwaway
 
     def run_direct(self, frames=None):
@@ -233,7 +289,7 @@ class PipelinedExecutor:
         if frames is None:
             dev = self._step(self._raw)
         else:
-            put = [jax.device_put(self._checked(frames[b % len(frames)]))
+            put = [self._put(self._checked(frames[b % len(frames)]))
                    for b in range(self.capacity)]
             dev = self._step(self._pack(*put))
         jax.block_until_ready(dev)
@@ -265,7 +321,7 @@ class PipelinedExecutor:
             dirty[slot] = True
             # explicit device_put so the H2D copy happens here, on the
             # host thread, and is accounted — only dirty slots transfer
-            frames[slot] = jax.device_put(self._checked(frame))
+            frames[slot] = self._put(self._checked(frame))
             h2d += self.frame_bytes
         n_dirty = int(dirty.sum())
         if n_dirty == self.capacity:
@@ -275,7 +331,7 @@ class PipelinedExecutor:
             # jax.transfer_guard("disallow") an implicit numpy→device
             # argument is an error, and the tick path must stay guard-clean
             self._raw = self._assemble(
-                self._raw, jax.device_put(dirty), *frames)
+                self._raw, self._put(dirty), *frames)
         dev = self._step(self._raw)
         seq = self._seq
         self._seq += 1

@@ -25,15 +25,19 @@ from typing import Callable, Dict, Mapping, Optional
 
 import jax
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.anytime.controller import ContractController, ControllerConfig
 from repro.anytime.cost import LadderCostModel, SceneFeatures
+from repro.core.stats import json_num
 from repro.anytime.ladder import Ladder, frame_quality
 from repro.bus.clock import SimClock
+from repro.distributed.sharding import data_shards
 from repro.perception.data import Scene, SceneConfig, generate_scene
 from repro.perception.pipelines import build_pipeline
 
 from .engine import BatchedPerceptionEngine
+from .fleet import FleetPlacer
 
 __all__ = ["ScheduledStream", "TickResult", "RungBucketScheduler"]
 
@@ -66,6 +70,10 @@ class TickResult:
     latencies: Dict[str, float]       # rung name -> batched step latency
     outputs: Dict[str, object]        # stream id -> FrameOutput
     rows: list                        # per-stream dict rows
+    # fleet mode only: rung name -> shard id -> [stream ids] (empty on a
+    # 1-shard scheduler, where seat location carries no cost signal)
+    shard_buckets: Dict[str, Dict[int, list]] = dataclasses.field(
+        default_factory=dict)
 
 
 class RungBucketScheduler:
@@ -77,11 +85,12 @@ class RungBucketScheduler:
         ladder: Ladder,
         capacity: int = 8,
         key: Optional[jax.Array] = None,
-        ctl_cfg: ControllerConfig = ControllerConfig(),
+        ctl_cfg: Optional[ControllerConfig] = None,
         clock: Optional[SimClock] = None,
         stage_cost: Optional[Callable[[str, str, int, float], float]] = None,
         depth: int = 1,
         obs=None,
+        mesh: Optional[Mesh] = None,
     ) -> None:
         if depth > 1 and stage_cost is not None:
             raise ValueError(
@@ -90,11 +99,18 @@ class RungBucketScheduler:
             )
         self.ladder = ladder
         self.capacity = capacity
-        self.ctl_cfg = ctl_cfg
+        self.ctl_cfg = ctl_cfg if ctl_cfg is not None else ControllerConfig()
         self.depth = depth
+        # fleet sharding: every rung engine partitions its padded slot
+        # batch over the mesh's data axis; the placer seats joining
+        # streams on shards by predicted (rung, batch-size) cost
+        self.mesh = mesh
+        self.n_shards = data_shards(mesh)
         # one cost model shared by every stream: latency is a property of
         # the shared accelerator, not of any one camera
         self.cost = LadderCostModel(ladder)
+        self.placer = FleetPlacer(self.cost, self.n_shards,
+                                  pipeline_depth=depth)
         # one engine per rung, all at full capacity: any bucket split can
         # be seated and membership churn never changes traced shapes
         self.engines: Dict[str, BatchedPerceptionEngine] = {}
@@ -102,7 +118,7 @@ class RungBucketScheduler:
             built = build_pipeline(rung.pipeline, scale=rung.scale,
                                    key=key, pad=False)
             self.engines[rung.name] = BatchedPerceptionEngine(
-                built, capacity=capacity, depth=depth)
+                built, capacity=capacity, depth=depth, mesh=mesh)
         self.streams: Dict[str, ScheduledStream] = {}
         self._last_bucket_size: Dict[str, int] = {}
         self._prev_rung: Dict[str, str] = {}
@@ -157,10 +173,12 @@ class RungBucketScheduler:
         self._prev_rung.clear()
         self.ticks = 0
         self.cost = LadderCostModel(self.ladder)
+        self.placer = FleetPlacer(self.cost, self.n_shards,
+                                  pipeline_depth=self.depth)
         for eng in self.engines.values():
             eng.reset()
 
-    def warm(self, probe_cfg: SceneConfig = SceneConfig()) -> None:
+    def warm(self, probe_cfg: Optional[SceneConfig] = None) -> None:
         """Compile every rung's batched step up front and seed the cost
         model with one measured full-capacity probe per rung.  Without the
         probe, an unobserved rung's batched prediction stays at the
@@ -169,6 +187,8 @@ class RungBucketScheduler:
         ``probe_cfg`` synthetic scenes, not blank buffers, so rungs with
         data-dependent post-processing (two_stage) seed a representative
         cost rather than a zero-proposal best case."""
+        if probe_cfg is None:
+            probe_cfg = SceneConfig()
         frames = [generate_scene(probe_cfg, i).image
                   for i in range(self.capacity)]
         for rung_name, eng in self.engines.items():
@@ -271,6 +291,7 @@ class RungBucketScheduler:
         latencies: Dict[str, float] = {}
         outputs: Dict[str, object] = {}
         rows: list[dict] = []
+        shard_buckets: Dict[str, Dict[int, list]] = {}
         for rung_name, members in buckets.items():
             eng = self.engines[rung_name]
             # migrate membership: leave streams that moved away, join the
@@ -279,7 +300,19 @@ class RungBucketScheduler:
                 eng.leave(sid)
             for sid in members:
                 if sid not in eng.active:
-                    eng.join(sid)
+                    shard = None
+                    if self.n_shards > 1:
+                        # fleet placement: seat on the shard whose
+                        # post-seating predicted cost is smallest
+                        shard = self.placer.place(
+                            rung_name, eng.shard_occupancy(),
+                            eng.slots_per_shard)
+                    eng.join(sid, shard=shard)
+            if self.n_shards > 1:
+                per: Dict[int, list] = {}
+                for sid in members:
+                    per.setdefault(eng.shard_of(sid), []).append(sid)
+                shard_buckets[rung_name] = per
             payload = {
                 sid: (scenes[sid],
                       budgets[sid] if budgets is not None else
@@ -300,9 +333,35 @@ class RungBucketScheduler:
                 for record, outs, echoed in eng.flush():
                     self._account_drain(rung_name, record, outs, echoed,
                                         latencies, outputs, rows)
+
+        # 4. cross-shard skew repair: when churn piles a rung's streams
+        # onto one shard, every tick pays that shard's batch size while
+        # other devices idle — migrate one stream toward balance
+        if self.n_shards > 1:
+            self._rebalance_shards(buckets)
         self.ticks += 1
         return TickResult(buckets=buckets, latencies=latencies,
-                          outputs=outputs, rows=rows)
+                          outputs=outputs, rows=rows,
+                          shard_buckets=shard_buckets)
+
+    def _rebalance_shards(self, buckets: Dict[str, list]) -> None:
+        """One placer-driven migration per skewed rung engine (lowest
+        stream id on the crowded shard moves; deterministic under
+        replay).  Slot churn only — never a retrace."""
+        for rung_name in buckets:
+            eng = self.engines[rung_name]
+            move = self.placer.rebalance(rung_name, eng.shard_occupancy())
+            if move is None:
+                continue
+            src, dst = move
+            for sid in sorted(eng.active):
+                if eng.shard_of(sid) == src:
+                    eng.migrate(sid, dst)
+                    if self.obs is not None:
+                        self.obs.tracer.instant(
+                            "shard_migrate", stream=sid, tick=self.ticks,
+                            rung=rung_name, axis="hardware", shard=dst)
+                    break
 
     def _account_drain(self, rung_name, record, outs, echoed,
                        latencies, outputs, rows) -> None:
@@ -363,6 +422,9 @@ class RungBucketScheduler:
 
     # ---------------- reporting ----------------
     def report(self) -> list[dict]:
+        """Per-stream outcome rows.  Floats go through ``json_num`` so an
+        idle stream's undefined statistics serialize as ``null`` rather
+        than the non-strict ``NaN`` literal in ``BENCH_results.json``."""
         rows = []
         for sid, st in sorted(self.streams.items()):
             lats = np.asarray(st.latencies)
@@ -370,9 +432,11 @@ class RungBucketScheduler:
                 "stream": sid,
                 "frames": st.frames,
                 "drops": st.drops,
-                "miss_rate": st.miss_rate,
-                "mean_quality": float(np.mean(st.qualities)) if st.qualities else float("nan"),
-                "p99_s": float(np.percentile(lats, 99)) if lats.size else float("nan"),
+                "miss_rate": json_num(st.miss_rate),
+                "mean_quality": (json_num(np.mean(st.qualities))
+                                 if st.qualities else None),
+                "p99_s": (json_num(np.percentile(lats, 99))
+                          if lats.size else None),
                 "switches": st.controller.switches,
             })
         return rows

@@ -24,12 +24,27 @@ __all__ = [
     "LatencySummary",
     "latency_range",
     "coefficient_of_variation",
+    "json_num",
     "pearson",
     "summarize",
     "Welford",
     "bootstrap_ci",
     "tail_ratio",
 ]
+
+
+def json_num(x):
+    """JSON-safe numeric: NaN/inf → None, else rounded to 9 places so
+    serialized reports are stable and small.  Every report that may end
+    up in ``BENCH_results.json`` or a golden fixture must route its
+    floats through here — ``json.dumps`` happily emits the non-strict
+    ``NaN``/``Infinity`` literals that strict parsers reject."""
+    if x is None:
+        return None
+    x = float(x)
+    if not math.isfinite(x):
+        return None
+    return round(x, 9)
 
 
 def _as_array(xs: Iterable[float]) -> np.ndarray:

@@ -38,6 +38,8 @@ __all__ = [
     "batch_specs",
     "decode_state_spec",
     "axis_size",
+    "data_shards",
+    "slot_batch_spec",
 ]
 
 
@@ -125,6 +127,34 @@ def specs_from_axes(rules: Ruleset, axes_tree: Any) -> Any:
 def shard_params_spec(model, rules: Ruleset) -> Any:
     """PartitionSpec pytree for a Model's parameters."""
     return specs_from_axes(rules, model.axes())
+
+
+def data_shards(mesh: Optional[Mesh]) -> int:
+    """Number of slot-batch shards a mesh provides: the size of its
+    ``data`` axis (1 for no mesh / no data axis)."""
+    if mesh is None or "data" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["data"])
+
+
+def slot_batch_spec(mesh: Optional[Mesh], capacity: int) -> P:
+    """PartitionSpec for the serving stack's padded slot batch
+    ``(capacity, H, W, C)``: slots over the ``data`` axis, feature dims
+    replicated.  The same spec (a tree-prefix) shards every leaf of the
+    fused step's output tree, all of which lead with the slot dim.
+
+    Raises when ``capacity`` does not divide over the data axis — the
+    fleet seats streams by contiguous per-shard slot blocks, so a ragged
+    split would misattribute slots to devices.
+    """
+    n = data_shards(mesh)
+    if n <= 1:
+        return P()
+    if capacity % n != 0:
+        raise ValueError(
+            f"capacity {capacity} must be divisible by the data axis "
+            f"({n} shards) so every shard owns an equal slot block")
+    return P("data")
 
 
 def _data_or_replicated(mesh: Mesh, rules: Ruleset, dim: int):

@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "PROD_SHAPE", "MULTIPOD_SHAPE"]
+__all__ = ["make_production_mesh", "make_local_mesh", "parse_mesh_spec",
+           "PROD_SHAPE", "MULTIPOD_SHAPE"]
 
 PROD_SHAPE = (16, 16)            # 256 chips, one v5e pod
 MULTIPOD_SHAPE = (2, 16, 16)     # 2 pods × 256 chips
@@ -23,8 +24,47 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
-    """A mesh over whatever devices exist locally (tests / examples)."""
+    """A mesh over whatever devices exist locally (tests / examples).
+
+    An oversubscribed request is factored down to the largest feasible
+    shape that preserves *both* axes: ``model`` is the rigid axis (it
+    encodes how the program itself is partitioned, so silently shrinking
+    it would change every sharded layout), while ``data`` is elastic and
+    shrinks to ``n // model``.  ``data=4, model=4`` on 8 devices yields
+    ``(2, 4)`` — never ``(8, 1)``.  When ``model`` alone exceeds the
+    device count it cannot be honored at any data width; that is an
+    error, not a silent collapse.
+    """
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data} model={model}")
     n = len(jax.devices())
+    if model > n:
+        raise ValueError(
+            f"mesh model={model} cannot be honored: only {n} device(s) "
+            f"available (need at least `model` devices; set "
+            f"--xla_force_host_platform_device_count for CPU experiments)")
     if data * model > n:
-        data, model = n, 1
+        data = max(1, n // model)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str) -> dict[str, int]:
+    """Parse a CLI mesh spec like ``data=4`` or ``data=4,model=2`` into
+    keyword arguments for :func:`make_local_mesh`."""
+    out: dict[str, int] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if name not in ("data", "model"):
+            raise ValueError(f"unknown mesh axis {name!r} in {spec!r} "
+                             f"(expected data=K[,model=M])")
+        try:
+            out[name] = int(val)
+        except ValueError:
+            raise ValueError(f"bad mesh axis size {val!r} in {spec!r}") from None
+    if not out:
+        raise ValueError(f"empty mesh spec {spec!r}")
+    return out

@@ -1,5 +1,6 @@
-"""Serving launcher: single-stream instrumented decoding, or the
-multi-tenant continuous-batching runtime under a Poisson arrival stream.
+"""Serving launcher: single-stream instrumented decoding, the
+multi-tenant continuous-batching runtime under a Poisson arrival stream,
+or the camera-fleet perception scheduler on a device mesh.
 
 Single stream (the seed engine)::
 
@@ -21,6 +22,14 @@ of being rejected at the door::
 
     python -m repro.launch.serve --arch rwkv6-3b --smoke --streams 8 \
         --slo-ms 5 --anytime
+
+Camera fleet on a device mesh (``--fleet``): N camera streams served by
+the rung-bucket scheduler, every rung engine's padded slot batch sharded
+over the mesh's ``data`` axis, under deterministic virtual time::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+    python -m repro.launch.serve --fleet --streams 8 --mesh data=2 \
+        --ticks 40 --json-out fleet.json
 """
 from __future__ import annotations
 
@@ -151,9 +160,101 @@ def serve_multi_tenant(args, cfg, model, params) -> None:
         )
 
 
+def serve_fleet(args) -> None:
+    """Camera-fleet mode: rung-bucket scheduling of ``--streams`` camera
+    streams, slot batches sharded over ``--mesh``'s data axis, ticked
+    under deterministic virtual time (seeded ``ModeledStageCost``).
+
+    Doubles as the measurement child of ``benchmarks/fleet.py``: the
+    parent forces host device counts via XLA_FLAGS and reads the
+    ``--json-out`` report, so the scaling numbers come from real sharded
+    XLA programs even on a 1-accelerator CI host."""
+    import json
+    import time as _time
+
+    from repro.batched.scheduler import RungBucketScheduler
+    from repro.distributed.sharding import data_shards
+    from repro.launch.mesh import make_local_mesh, parse_mesh_spec
+    from repro.perception.data import SceneConfig, generate_scene
+    from repro.scenarios.replay import ModeledStageCost, replay_ladder
+
+    mesh = None
+    if args.mesh:
+        mesh = make_local_mesh(**parse_mesh_spec(args.mesh))
+    n_shards = data_shards(mesh)
+    cap = max(args.batch, args.streams)
+    if cap % n_shards:
+        cap += n_shards - cap % n_shards
+
+    clock = SimClock()
+    ladder = replay_ladder()
+    cost = ModeledStageCost(ladder, seed=0)
+    sched = RungBucketScheduler(ladder, capacity=cap, clock=clock,
+                                stage_cost=cost, mesh=mesh)
+    obs = None
+    if args.obs:
+        from repro.obs import Observatory
+        obs = Observatory()
+        obs.bind_clock(clock)
+        sched.set_obs(obs)
+    sched.warm(SceneConfig(scenario="city", seed=7))
+    budget_s = args.slo_ms * 1e-3 if args.slo_ms is not None else 0.03
+    sids = [f"cam{i:02d}" for i in range(args.streams)]
+    for sid in sids:
+        sched.add_stream(sid, budget_s)
+
+    rng = np.random.default_rng(0)
+    frames = 0
+    t_wall = _time.perf_counter()
+    for t in range(args.ticks):
+        scenes = {
+            sid: generate_scene(
+                SceneConfig(scenario="city", rain_mm_per_hour=float(
+                    rng.choice([0.0, 0.0, 4.0])), seed=i), t)
+            for i, sid in enumerate(sids)}
+        res = sched.tick(scenes)
+        frames += len(res.outputs)
+    wall_s = _time.perf_counter() - t_wall
+    virtual_s = clock.time()
+
+    occupancy = {name: eng.shard_occupancy()
+                 for name, eng in sched.engines.items() if eng.n_active}
+    traces = {name: eng.trace_count for name, eng in sched.engines.items()}
+    doc = {
+        "mesh": args.mesh or None,
+        "devices": jax.device_count(),
+        "n_shards": n_shards,
+        "capacity": cap,
+        "streams": args.streams,
+        "ticks": args.ticks,
+        "frames": frames,
+        "virtual_s": virtual_s,
+        "frames_per_vs": frames / virtual_s if virtual_s > 0 else None,
+        "wall_s": wall_s,
+        "trace_counts": traces,
+        "shard_occupancy": occupancy,
+        "report": sched.report(),
+    }
+    print(f"fleet: {args.streams} streams x {args.ticks} ticks on "
+          f"{n_shards} shard(s) ({jax.device_count()} device(s)): "
+          f"{frames} frames in {virtual_s*1e3:.1f}ms virtual "
+          f"({doc['frames_per_vs']:.1f} frames/s), wall {wall_s:.2f}s")
+    for name, occ in occupancy.items():
+        print(f"  {name}: shard occupancy {occ} (traces={traces[name]})")
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True, allow_nan=False)
+        print(f"wrote fleet report to {args.json_out}")
+    if obs is not None and args.trace_out:
+        obs.write_trace(args.trace_out, process_label="fleet")
+        print(f"wrote Chrome trace to {args.trace_out} "
+              f"({obs.tracer.n_recorded} spans)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None,
+                    help="decode model architecture (required unless --fleet)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size (multi-tenant: static slot capacity)")
@@ -162,7 +263,20 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--deadline", choices=sorted(POLICY), default="mean")
     ap.add_argument("--streams", type=int, default=0,
-                    help="multi-tenant mode: serve N Poisson-arriving streams")
+                    help="multi-tenant mode: serve N Poisson-arriving streams"
+                         " (with --fleet: N camera streams)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="camera-fleet mode: rung-bucket perception "
+                         "scheduling of --streams cameras, slot batches "
+                         "sharded over --mesh")
+    ap.add_argument("--mesh", default=None,
+                    help="fleet mesh spec, e.g. 'data=2' or "
+                         "'data=2,model=1' (omit for a single device)")
+    ap.add_argument("--ticks", type=int, default=40,
+                    help="fleet mode: number of scheduler ticks to run")
+    ap.add_argument("--json-out", default=None,
+                    help="fleet mode: write the machine-readable run "
+                         "report (the benchmarks/fleet.py channel) here")
     ap.add_argument("--arrival-rate", type=float, default=100.0,
                     help="multi-tenant Poisson arrival rate (streams/s, simulated)")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -190,7 +304,22 @@ def main() -> None:
             and not args.obs:
         ap.error("--trace-out/--obs-period have no effect without --obs")
     if args.obs and args.streams <= 0:
-        ap.error("--obs needs multi-tenant mode (--streams N)")
+        ap.error("--obs needs multi-tenant mode (--streams N) or --fleet")
+
+    if args.fleet:
+        if args.streams <= 0:
+            ap.error("--fleet needs --streams N (camera stream count)")
+        if args.arch is not None:
+            ap.error("--fleet serves the perception ladder, not a decode "
+                     "arch; drop --arch")
+        serve_fleet(args)
+        return
+    if args.mesh is not None:
+        ap.error("--mesh only applies to --fleet")
+    if args.json_out is not None:
+        ap.error("--json-out only applies to --fleet")
+    if args.arch is None:
+        ap.error("--arch is required (unless --fleet)")
 
     if args.anytime and args.admission == "none":
         ap.error("--anytime needs the predictive admission controller "

@@ -33,6 +33,9 @@ def render_table(hub: MetricsHub, tracer: Optional[SpanTracer] = None,
             f"{r['p99'] * 1e3:>9.2f}{r['cv']:>6.2f}")
     if len(rows) > top:
         lines.append(f"... {len(rows) - top} more keys")
+    bad = sum(r.get("dropped", 0) for r in rows)
+    if bad:
+        lines.append(f"non-finite samples dropped: {bad}")
     if tracer is not None:
         lines.append(f"spans: {tracer.n_recorded} recorded, "
                      f"{tracer.dropped} dropped "

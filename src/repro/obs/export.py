@@ -52,6 +52,8 @@ def to_chrome_trace(spans: Iterable[Span],
         args = {"axis": s.axis, "tick": s.tick, "rung": s.rung,
                 "batch_size": s.batch_size, "seq": s.seq,
                 "parent": s.parent}
+        if s.shard >= 0:
+            args["shard"] = s.shard
         if s.t1 > s.t0:
             events.append({
                 "ph": "X", "name": s.name, "cat": s.axis,

@@ -12,6 +12,7 @@ error beyond the sketch's fixed bin width.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Hashable, Optional
 
 from repro.core.stats import Welford
@@ -38,8 +39,14 @@ class StageMetrics:
         self.sketch = LatencySketch(lo=lo, gamma=gamma, n_bins=n_bins)
 
     def update(self, x: float) -> None:
-        self.welford.update(float(x))
-        self.sketch.update(float(x))
+        x = float(x)
+        if not math.isfinite(x):
+            # the sketch counts it in .dropped; keep the Welford moments
+            # finite too (one NaN would poison mean/CV forever)
+            self.sketch.update(x)
+            return
+        self.welford.update(x)
+        self.sketch.update(x)
 
     def merge(self, other: "StageMetrics") -> "StageMetrics":
         self.welford = self.welford.merge(other.welford)  # Chan, out-of-place
@@ -49,6 +56,10 @@ class StageMetrics:
     @property
     def count(self) -> int:
         return self.sketch.count
+
+    @property
+    def dropped(self) -> int:
+        return self.sketch.dropped
 
     @property
     def mean(self) -> float:
@@ -65,6 +76,7 @@ class StageMetrics:
     def summary(self) -> dict:
         return {
             "count": self.count,
+            "dropped": self.dropped,
             "mean": self.mean,
             "cv": self.cv,
             "p50": self.quantile(0.50),

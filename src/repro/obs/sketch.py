@@ -122,7 +122,8 @@ class LatencySketch:
         self._log_gamma = math.log(gamma)
         self._counts: dict[int, int] = {}   # sparse: bin index -> count
         self.count = 0
-        self.min = math.inf
+        self.dropped = 0                     # non-finite samples, kept out
+        self.min = math.inf                  # of count/min/max/quantiles
         self.max = -math.inf
 
     def _bin(self, x: float) -> int:
@@ -133,6 +134,11 @@ class LatencySketch:
 
     def update(self, x: float) -> None:
         x = float(x)
+        if not math.isfinite(x):
+            # one NaN completion latency must not kill the hub: count it
+            # where the dashboard can see it and keep the histogram clean
+            self.dropped += 1
+            return
         b = self._bin(x)
         self._counts[b] = self._counts.get(b, 0) + 1
         self.count += 1
@@ -153,6 +159,7 @@ class LatencySketch:
         for i, c in other._counts.items():
             self._counts[i] = self._counts.get(i, 0) + c
         self.count += other.count
+        self.dropped += other.dropped
         self.min = min(self.min, other.min)
         self.max = max(self.max, other.max)
         return self
@@ -161,6 +168,7 @@ class LatencySketch:
         out = LatencySketch(self.lo, self.gamma, self.n_bins)
         out._counts = dict(self._counts)
         out.count = self.count
+        out.dropped = self.dropped
         out.min = self.min
         out.max = self.max
         return out
@@ -194,6 +202,7 @@ class LatencySketch:
         return {
             "lo": self.lo, "gamma": self.gamma, "n_bins": self.n_bins,
             "count": self.count,
+            "dropped": self.dropped,
             "min": self.min if self.count else None,
             "max": self.max if self.count else None,
             "counts": {str(i): c for i, c in sorted(self._counts.items())},

@@ -49,6 +49,8 @@ class Span:
     *close* order.  ``parent`` is the ``seq`` of the enclosing open span
     or ``-1`` at top level.  ``track`` separates overlapped pipelined
     ticks onto parallel renderer rows (tid in the Chrome trace).
+    ``shard`` is the data-shard id serving the interval on a fleet mesh
+    (``-1`` = not shard-specific / single-device).
     """
 
     name: str
@@ -62,6 +64,7 @@ class Span:
     track: int = 0
     parent: int = -1
     seq: int = 0
+    shard: int = -1
 
     @property
     def duration(self) -> float:
@@ -119,6 +122,7 @@ class SpanTracer:
         axis: str = "end_to_end",
         track: int = 0,
         parent: Optional[int] = None,
+        shard: int = -1,
     ) -> Span:
         """Write one already-measured interval into the ring (the adapter
         entry point used by ``StageTimer`` and the engines' per-tick
@@ -132,7 +136,7 @@ class SpanTracer:
                 parent = self._open[-1] if self._open else -1
             span = Span(name=name, t0=t0, t1=t1, stream=stream, tick=tick,
                         rung=rung, batch_size=batch_size, axis=axis,
-                        track=track, parent=parent, seq=seq)
+                        track=track, parent=parent, seq=seq, shard=shard)
             self._ring[self._n % self.capacity] = span
             self._n += 1
         return span
@@ -148,6 +152,7 @@ class SpanTracer:
         batch_size: int = 0,
         axis: str = "end_to_end",
         track: int = 0,
+        shard: int = -1,
         fence: Any = None,
     ) -> Iterator[None]:
         """Context-managed span with nesting (children see this span as
@@ -180,7 +185,8 @@ class SpanTracer:
                         pass
                 span = Span(name=name, t0=t0, t1=t1, stream=stream,
                             tick=tick, rung=rung, batch_size=batch_size,
-                            axis=axis, track=track, parent=parent, seq=seq)
+                            axis=axis, track=track, parent=parent, seq=seq,
+                            shard=shard)
                 self._ring[self._n % self.capacity] = span
                 self._n += 1
 

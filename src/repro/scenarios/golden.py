@@ -96,9 +96,12 @@ def _band(key: str, want: float, tol: Tolerance) -> float:
     return max(tol.count_abs, tol.count_frac * abs(want))
 
 
-def compare_reports(got: dict, want: dict, tol: Tolerance = Tolerance()) -> list[str]:
+def compare_reports(got: dict, want: dict,
+                    tol: Optional[Tolerance] = None) -> list[str]:
     """All tolerance-band violations between two report dicts, as
     human-readable ``path: detail`` strings (empty list = within bands)."""
+    if tol is None:
+        tol = Tolerance()
     problems: list[str] = []
 
     def walk(g, w, path: str, key: str) -> None:

@@ -30,12 +30,12 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import json
-import math
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.anytime.controller import ControllerConfig
+from repro.core.stats import json_num
 from repro.anytime.ladder import Ladder, Rung
 from repro.batched.scheduler import RungBucketScheduler
 from repro.bus.clock import SimClock
@@ -135,13 +135,10 @@ class ModeledStageCost:
         return float(step * self.rng.lognormal(0.0, self.jitter))
 
 
-def _num(x) -> Optional[float]:
-    """JSON-safe numeric: NaN → None, else rounded so the serialized
-    report is stable and small."""
-    x = float(x)
-    if math.isnan(x):
-        return None
-    return round(x, 9)
+# JSON-safe numeric sanitizer, shared with every other report producer
+# (scheduler reports, benchmark rows) so strict parsers never meet a
+# bare NaN literal.  Kept under the historical local name.
+_num = json_num
 
 
 @dataclasses.dataclass
@@ -282,12 +279,13 @@ class ScenarioReplayer:
         ladder: Optional[Ladder] = None,
         scheduler: Optional[RungBucketScheduler] = None,
         capacity: Optional[int] = None,
-        ctl_cfg: ControllerConfig = ControllerConfig(),
+        ctl_cfg: Optional[ControllerConfig] = None,
         key=None,
         fusion_queue: int = 4,
         jitter: float = 0.06,
         depth: int = 1,
         obs=None,
+        mesh=None,
     ) -> None:
         if depth < 1:
             raise ValueError(f"depth must be >= 1 (got {depth})")
@@ -304,14 +302,19 @@ class ScenarioReplayer:
                     f"{trace.name!r}")
             ladder = ladder if ladder is not None else replay_ladder()
             self.cost = ModeledStageCost(ladder, seed=trace.seed, jitter=jitter)
+            # mesh=: a fleet replay shards every rung engine's slot batch
+            # over the mesh's data axis.  On a 1-shard mesh the modeled
+            # cost path and placer are bypassed entirely (n_shards == 1),
+            # so the report stays byte-identical to the meshless golden.
             scheduler = RungBucketScheduler(
                 ladder, capacity=cap, key=key, ctl_cfg=ctl_cfg,
-                clock=self.clock, stage_cost=self.cost, depth=self.depth)
+                clock=self.clock, stage_cost=self.cost, depth=self.depth,
+                mesh=mesh)
         else:
             # a reused scheduler brings its own ladder/controller config/
             # PRNG key — accepting overrides here would silently produce a
             # report under a different configuration than requested
-            if ladder is not None or key is not None or ctl_cfg != ControllerConfig():
+            if ladder is not None or key is not None or ctl_cfg is not None:
                 raise ValueError(
                     "scheduler was passed already built; ladder/ctl_cfg/key "
                     "belong to its construction and would be silently "

@@ -127,7 +127,10 @@ def _draw(rng: np.random.Generator, spec: StageSpec, job: int) -> float:
     return base if base >= _MIN_STAGE_S else _MIN_STAGE_S
 
 
-def simulate(tasks: list[TaskSpec], cfg: SimConfig = SimConfig()) -> SimResult:
+def simulate(tasks: list[TaskSpec],
+             cfg: Optional[SimConfig] = None) -> SimResult:
+    if cfg is None:
+        cfg = SimConfig()
     rng = np.random.default_rng(cfg.seed)
     jobs: list[_Job] = []
     for t in tasks:

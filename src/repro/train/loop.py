@@ -101,13 +101,13 @@ class Trainer:
         self,
         model: Model,
         mesh: Mesh,
-        train_cfg: TrainConfig = TrainConfig(),
+        train_cfg: Optional[TrainConfig] = None,
         rules: Optional[Ruleset] = None,
         fsdp: bool = False,
     ) -> None:
         self.model = model
         self.mesh = mesh
-        self.cfg = train_cfg
+        self.cfg = train_cfg if train_cfg is not None else TrainConfig()
         self.rules = rules or default_rules(model.cfg, mesh, fsdp=fsdp)
         self.recorder = TimelineRecorder()
 

@@ -347,7 +347,7 @@ def test_findings_carry_location_axis_and_hint():
 def test_every_rule_maps_to_a_paper_axis():
     from repro.analysis import AXES
     assert {r.axis for r in RULES.values()} == set(AXES)
-    assert sorted(RULES) == [f"TV00{i}" for i in range(1, 7)]
+    assert sorted(RULES) == [f"TV00{i}" for i in range(1, 8)]
 
 
 # ------------------------------------------------- suppressions -------
@@ -739,3 +739,51 @@ def test_sentinel_wrapped_golden_episode_is_clean_and_byte_identical():
     rep = sent.report()
     assert rep.compiles == 0 and rep.ok
     assert guarded.to_json(indent=2) == plain.to_json(indent=2)
+
+
+# ------------------------------------------------------------- TV007 --
+
+def test_tv007_flags_mutable_literal_defaults():
+    src = """
+        def seat(streams=[], weights={}, seen=set()):
+            return streams
+    """
+    assert _rules(src).count("TV007") == 3
+
+
+def test_tv007_flags_constructed_config_default():
+    src = """
+        class SceneConfig:
+            pass
+
+        def warm(probe_cfg=SceneConfig()):
+            return probe_cfg
+    """
+    assert "TV007" in _rules(src)
+
+
+def test_tv007_flags_keyword_only_defaults():
+    src = """
+        def plan(*, overrides={"a": 1}):
+            return overrides
+    """
+    assert "TV007" in _rules(src)
+
+
+def test_tv007_ignores_immutable_defaults():
+    src = """
+        def f(x=None, n=3, name="cam", dims=(1, 2), scale=float("nan"),
+              empty=tuple(), frozen=frozenset()):
+            return x
+    """
+    assert "TV007" not in _rules(src)
+
+
+def test_tv007_shipped_tree_is_clean():
+    """The audited fix: no hot-path module ships a mutable default."""
+    from repro.analysis.lint import lint_paths
+
+    src_root = REPO / "src"
+    findings = lint_paths(sorted(src_root.rglob("*.py")), src_root)
+    tv007 = [f for f in findings if f.rule == "TV007" and not f.suppressed]
+    assert tv007 == [], [f.render() for f in tv007]
