@@ -37,6 +37,7 @@ MODULES = [
     "roofline",
     "cert_overhead",
     "fleet",
+    "chaos",
 ]
 
 

@@ -92,6 +92,16 @@ RULES: dict[str, Rule] = {
             "by every call and every instance — use `arg=None` and build "
             "the fresh value inside the body",
         ),
+        Rule(
+            "TV008",
+            "runtime",
+            "fault-swallowing retry in a hot path",
+            "a bare/broad except that only passes, or a `while True` retry "
+            "whose handler never raises/breaks, turns a transient fault "
+            "into a silent unbounded stall — bound the retries, back off "
+            "between attempts, and surface the failure (see "
+            "chaos.recovery.FleetResilience)",
+        ),
     ]
 }
 

@@ -52,6 +52,13 @@ Rules (axis in brackets):
   scheduler/engine built through it — aliases the same instance.
   Constructor calls to known-immutable builtins (``tuple``,
   ``frozenset``, numbers, strings) are exempt.
+* **TV008 [runtime]** — fault swallowing in a hot context: a bare
+  ``except:`` (or ``except Exception/BaseException:``) whose handler
+  only ``pass``/``continue``\\ s, and ``while True`` retry loops whose
+  exception handler never raises, breaks, or returns.  Both hide timing
+  hazards (the fault still cost the tick its deadline) and turn
+  transient faults into silent unbounded stalls; recovery belongs in a
+  bounded retry with backoff that surfaces exhaustion.
 """
 from __future__ import annotations
 
@@ -459,7 +466,63 @@ class _Analyzer(ast.NodeVisitor):
                        "Python while-condition on a traced value forces a "
                        "blocking host sync (or a tracer error) every "
                        "iteration")
+        if self._hot() and self._is_unbounded_retry(node):
+            self._emit("TV008", node,
+                       "unbounded `while True` retry: the exception handler "
+                       "never raises, breaks, or returns, so a persistent "
+                       "fault spins this hot path forever")
         self._enter_loop(node)
+
+    # ------------------------------------------------ fault swallowing
+    @staticmethod
+    def _swallows(handler: ast.ExceptHandler) -> bool:
+        """True when nothing in the handler can leave the loop/function:
+        no raise, no break, no return anywhere in its body."""
+        return not any(isinstance(n, (ast.Raise, ast.Break, ast.Return))
+                       for n in ast.walk(handler))
+
+    @staticmethod
+    def _is_broad(handler: ast.ExceptHandler) -> bool:
+        if handler.type is None:
+            return True
+        names = ([handler.type] if not isinstance(handler.type, ast.Tuple)
+                 else handler.type.elts)
+        return any(isinstance(t, ast.Name)
+                   and t.id in ("Exception", "BaseException")
+                   for t in names)
+
+    @classmethod
+    def _is_unbounded_retry(cls, node: ast.While) -> bool:
+        """``while True`` (constant-truthy test) containing a ``try``
+        whose every handler swallows: only a clean iteration can ever
+        exit, so a persistent fault loops forever.  Any non-swallowing
+        handler (it re-raises or breaks out) bounds the loop."""
+        if not (isinstance(node.test, ast.Constant) and node.test.value):
+            return False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Try) and sub.handlers and all(
+                    cls._swallows(h) for h in sub.handlers):
+                return True
+        return False
+
+    def visit_Try(self, node: ast.Try) -> None:
+        if self._hot():
+            for handler in node.handlers:
+                # swallow-only means literally inert: every statement is
+                # a pass/continue.  A handler that logs, counts, backs
+                # off, or falls back at least made the fault observable.
+                inert = all(isinstance(s, (ast.Pass, ast.Continue))
+                            for s in handler.body)
+                if inert and self._is_broad(handler):
+                    what = ("bare `except:`" if handler.type is None
+                            else "broad `except` clause")
+                    self._emit(
+                        "TV008", handler,
+                        f"{what} that only "
+                        f"{'passes' if isinstance(handler.body[0], ast.Pass) else 'continues'} "
+                        f"in a hot path: the fault (and its latency cost) "
+                        f"vanishes silently")
+        self.generic_visit(node)
 
     def _enter_comp(self, node) -> None:
         self._loop_depth += 1

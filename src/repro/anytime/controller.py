@@ -140,6 +140,25 @@ class ContractController:
         """Feed the measured frame back into the cost model."""
         self.cost.observe(rung_name, record, feats)
 
+    def force_degrade(self, steps: int = 1) -> bool:
+        """Drop ``steps`` rungs immediately, clamped at the ladder floor.
+
+        The chaos/recovery path's lever: a watchdog-tripped or evacuated
+        stream is pushed down the ladder *now*, outside the normal
+        budget-fit reasoning, and climbs back only through ``select()``'s
+        usual upgrade hysteresis (headroom × hold frames) — so recovery
+        is as reluctant as any other upgrade.  Returns False when already
+        at the floor (the caller's cue to skip frames instead)."""
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1 (got {steps})")
+        nxt = min(self._idx + steps, len(self.ladder) - 1)
+        if nxt == self._idx:
+            return False
+        self._idx = nxt
+        self._since_switch = 0
+        self.switches += 1
+        return True
+
 
 class FixedController:
     """Static baseline: always the same rung (the A/B comparator).  Takes

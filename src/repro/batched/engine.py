@@ -225,6 +225,13 @@ class BatchedPerceptionEngine:
         return [self._slots_per_shard - len(self._free[k])
                 for k in range(self.n_shards)]
 
+    def streams_on(self, shard: int) -> list[str]:
+        """Stream ids seated on one data shard, sorted — the evacuation
+        order during shard failover (sorted so recovery is deterministic
+        under replay)."""
+        return sorted(sid for sid in self.active
+                      if self.shard_of(sid) == shard)
+
     def join(self, stream_id: str,
              shard: Optional[int] = None) -> BatchedStreamState:
         """Seat a stream in a free slot.  Raises when the batch is full.

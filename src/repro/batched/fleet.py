@@ -44,6 +44,19 @@ class FleetPlacer:
         self.cost = cost
         self.n_shards = n_shards
         self.pipeline_depth = pipeline_depth
+        # shards declared lost by the chaos/recovery path: excluded from
+        # placement and rebalance until revived.  Their slots still exist
+        # in every engine's padded batch (the traced shape is sacred) —
+        # "dead" only means no stream may be seated there.
+        self.dead: set[int] = set()
+
+    def mark_dead(self, shard: int) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        self.dead.add(shard)
+
+    def mark_alive(self, shard: int) -> None:
+        self.dead.discard(shard)
 
     def _shard_cost(self, rung_name: str, batch_size: int) -> float:
         """Predicted batched-step cost of one shard serving
@@ -69,11 +82,13 @@ class FleetPlacer:
                 f"occupancy has {len(occupancy)} entries for "
                 f"{self.n_shards} shards")
         candidates = [k for k in range(self.n_shards)
-                      if occupancy[k] < slots_per_shard]
+                      if occupancy[k] < slots_per_shard and k not in self.dead]
         if not candidates:
+            alive = self.n_shards - len(self.dead)
             raise RuntimeError(
-                f"all {self.n_shards} shards full "
-                f"({slots_per_shard} slots each)")
+                f"all {alive} alive shards full "
+                f"({slots_per_shard} slots each, "
+                f"{len(self.dead)} shard(s) dead)")
         return min(candidates,
                    key=lambda k: (self._shard_cost(rung_name,
                                                    occupancy[k] + 1), k))
@@ -87,10 +102,11 @@ class FleetPlacer:
         never worth a carve-out; from two upward, moving a stream off
         the most-loaded shard strictly reduces the max per-shard batch
         size this rung pays every tick."""
-        if self.n_shards <= 1:
+        alive = [k for k in range(self.n_shards) if k not in self.dead]
+        if len(alive) <= 1:
             return None
-        src = max(range(self.n_shards), key=lambda k: (occupancy[k], -k))
-        dst = min(range(self.n_shards), key=lambda k: (occupancy[k], k))
+        src = max(alive, key=lambda k: (occupancy[k], -k))
+        dst = min(alive, key=lambda k: (occupancy[k], k))
         if occupancy[src] - occupancy[dst] < 2:
             return None
         return (src, dst)

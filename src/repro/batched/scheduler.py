@@ -126,6 +126,15 @@ class RungBucketScheduler:
         self.clock = None
         self.stage_cost = None
         self.obs = None
+        # chaos/recovery: a ``repro.chaos.recovery.FleetResilience`` (duck
+        # typed — the scheduler never imports chaos, so the dependency
+        # points one way).  None means every recovery path is inert and
+        # placement failures propagate as before.
+        self.resilience = None
+        # streams unseated by shard evacuation under capacity pressure:
+        # the normal tick join path re-seats them once alive capacity
+        # returns, and that join is ledgered as the completing failover
+        self._pending_reseat: set = set()
         self.set_virtual(clock, stage_cost)
         self.set_obs(obs)
 
@@ -175,8 +184,22 @@ class RungBucketScheduler:
         self.cost = LadderCostModel(self.ladder)
         self.placer = FleetPlacer(self.cost, self.n_shards,
                                   pipeline_depth=self.depth)
+        # resilience is per-episode state (health machines, armed faults):
+        # a reused scheduler must not leak one episode's quarantines into
+        # the next — the replayer re-attaches a fresh instance when asked
+        self.resilience = None
+        self._pending_reseat.clear()
         for eng in self.engines.values():
             eng.reset()
+
+    def attach_resilience(self, res) -> None:
+        """Attach a ``FleetResilience`` (None detaches).  With it attached
+        the scheduler gains its failure paths: NaN-frame quarantine at
+        ingest, bounded retry of transient step faults, a latency
+        watchdog that forces rung degrades, and survivable placement
+        failure during shard evacuation."""
+        self.resilience = res
+        self._pending_reseat.clear()
 
     def warm(self, probe_cfg: Optional[SceneConfig] = None) -> None:
         """Compile every rung's batched step up front and seed the cost
@@ -223,10 +246,58 @@ class RungBucketScheduler:
 
     def remove_stream(self, stream_id: str) -> ScheduledStream:
         st = self.streams.pop(stream_id)
+        self._pending_reseat.discard(stream_id)
         for eng in self.engines.values():
             if stream_id in eng.active:
                 eng.leave(stream_id)
         return st
+
+    # ---------------- shard failure / recovery ----------------
+    def kill_shard(self, shard: int) -> None:
+        """Declare ``shard`` lost and evacuate every stream seated on it.
+
+        Evacuation is pure slot churn via ``engine.migrate`` — traced
+        shapes never change, so failover is retrace-free by construction
+        (the chaos gate asserts compile budget 0 across it).  When the
+        surviving shards have no free slot for a victim, the stream is
+        unseated instead, its controller force-degraded (capacity
+        pressure: it will re-enter at lower fidelity), and queued on
+        ``_pending_reseat`` for the normal join path to re-seat once
+        capacity returns."""
+        res = self.resilience
+        self.placer.mark_dead(shard)
+        for rung_name in sorted(self.engines):
+            eng = self.engines[rung_name]
+            for sid in eng.streams_on(shard):
+                try:
+                    dst = self.placer.place(
+                        rung_name, eng.shard_occupancy(),
+                        eng.slots_per_shard)
+                except RuntimeError:
+                    eng.leave(sid)
+                    self._pending_reseat.add(sid)
+                    st = self.streams.get(sid)
+                    if st is not None:
+                        st.controller.force_degrade()
+                    if res is not None:
+                        res.ledger.add(
+                            self.ticks, "degrade",
+                            f"evacuation capacity pressure: unseated from "
+                            f"shard {shard}", stream=sid, shard=shard)
+                    continue
+                eng.migrate(sid, dst)
+                if res is not None:
+                    res.ledger.add(
+                        self.ticks, "failover",
+                        f"evacuated {rung_name} stream from shard {shard}",
+                        stream=sid, shard=dst)
+
+    def revive_shard(self, shard: int) -> None:
+        """Return ``shard`` to the placement pool.  Streams drift back via
+        the normal per-tick skew rebalance — no eager mass migration, so
+        recovery has the same one-move-per-tick churn bound as any other
+        imbalance."""
+        self.placer.mark_alive(shard)
 
     # ---------------- the tick ----------------
     def _features(self, st: ScheduledStream, scene: Scene) -> SceneFeatures:
@@ -265,6 +336,13 @@ class RungBucketScheduler:
         if unknown:
             raise KeyError(f"scenes for unknown streams: {sorted(unknown)}")
 
+        # chaos/recovery ingest guard: quarantined streams are skipped,
+        # non-finite frame payloads are dropped and fault-counted.  With
+        # no resilience attached (or a healthy fleet) this returns the
+        # same mapping and the tick below is byte-identical.
+        if self.resilience is not None:
+            scenes = self._guard_ingest(scenes)
+
         # dropout-aware: a seated stream with no frame this tick is a
         # dropped sensor frame, not an error — count it, serve the rest
         for sid, st in self.streams.items():
@@ -292,22 +370,57 @@ class RungBucketScheduler:
         outputs: Dict[str, object] = {}
         rows: list[dict] = []
         shard_buckets: Dict[str, Dict[int, list]] = {}
-        for rung_name, members in buckets.items():
+        for rung_name in list(buckets):
+            members = buckets[rung_name]
             eng = self.engines[rung_name]
             # migrate membership: leave streams that moved away, join the
             # ones that moved in (slot churn only — never a retrace)
             for sid in [s for s in eng.active if s not in members]:
                 eng.leave(sid)
+            unseatable: list[str] = []
             for sid in members:
                 if sid not in eng.active:
                     shard = None
                     if self.n_shards > 1:
                         # fleet placement: seat on the shard whose
                         # post-seating predicted cost is smallest
-                        shard = self.placer.place(
-                            rung_name, eng.shard_occupancy(),
-                            eng.slots_per_shard)
+                        try:
+                            shard = self.placer.place(
+                                rung_name, eng.shard_occupancy(),
+                                eng.slots_per_shard)
+                        except RuntimeError:
+                            if self.resilience is None:
+                                raise
+                            # no alive capacity: survivable under chaos —
+                            # the stream's frame drops this tick and the
+                            # join retries next tick
+                            self.streams[sid].drops += 1
+                            unseatable.append(sid)
+                            continue
                     eng.join(sid, shard=shard)
+                    if (sid in self._pending_reseat
+                            and self.resilience is not None):
+                        # the deferred half of a shard evacuation lands
+                        self._pending_reseat.discard(sid)
+                        self.resilience.ledger.add(
+                            self.ticks, "failover",
+                            "re-seated after evacuation capacity pressure",
+                            stream=sid,
+                            shard=shard if shard is not None else -1)
+            if unseatable:
+                members = [s for s in members if s not in unseatable]
+                buckets[rung_name] = members
+                if not members:
+                    continue
+            # transient step faults: the resilience layer arms N failures;
+            # each bucket step retries through them with exponential
+            # backoff, aborting (bucket drops one tick) past max_retries
+            if self.resilience is not None and self.resilience.armed:
+                if not self._retry_gate(rung_name):
+                    for sid in members:
+                        self.streams[sid].drops += 1
+                    buckets[rung_name] = []
+                    continue
             if self.n_shards > 1:
                 per: Dict[int, list] = {}
                 for sid in members:
@@ -334,7 +447,13 @@ class RungBucketScheduler:
                     self._account_drain(rung_name, record, outs, echoed,
                                         latencies, outputs, rows)
 
-        # 4. cross-shard skew repair: when churn piles a rung's streams
+        # 4. watchdog: a served frame that blew past its deadline by the
+        # watchdog factor is a wedged tick, not ordinary jitter — fault
+        # the stream's health machine and force its rung down now
+        if self.resilience is not None:
+            self._watchdog(rows)
+
+        # 5. cross-shard skew repair: when churn piles a rung's streams
         # onto one shard, every tick pays that shard's batch size while
         # other devices idle — migrate one stream toward balance
         if self.n_shards > 1:
@@ -343,6 +462,90 @@ class RungBucketScheduler:
         return TickResult(buckets=buckets, latencies=latencies,
                           outputs=outputs, rows=rows,
                           shard_buckets=shard_buckets)
+
+    # ---------------- chaos/recovery paths ----------------
+    def _guard_ingest(self, scenes: Mapping[str, Scene]) -> Dict[str, Scene]:
+        """Health-gate this tick's frames: age quarantine probations, skip
+        quarantined streams, drop non-finite payloads (fault-counting the
+        stream: repeated garbage escalates to quarantine)."""
+        res = self.resilience
+        for sid in res.age_quarantine(self.ticks):
+            res.ledger.add(self.ticks, "probation",
+                           "quarantine aged out: stream on probation",
+                           stream=sid)
+        out: Dict[str, Scene] = {}
+        for sid, scene in scenes.items():
+            if res.is_quarantined(sid):
+                res.ledger.add(self.ticks, "skip",
+                               "quarantined stream skipped", stream=sid)
+                continue
+            if not np.all(np.isfinite(np.asarray(scene.image))):
+                res.ledger.add(self.ticks, "nan_drop",
+                               "non-finite frame payload dropped at ingest",
+                               stream=sid)
+                self._apply_fault_action(sid, res.note_fault(sid, self.ticks))
+                continue
+            out[sid] = scene
+        return out
+
+    def _apply_fault_action(self, sid: str, action: str) -> None:
+        """Translate a health-machine verdict into scheduler state."""
+        res = self.resilience
+        if action == "degrade":
+            st = self.streams.get(sid)
+            if st is not None and st.controller.force_degrade():
+                res.ledger.add(self.ticks, "degrade",
+                               "health degrade: rung forced down",
+                               stream=sid)
+        elif action == "quarantine":
+            res.ledger.add(self.ticks, "quarantine",
+                           "fault threshold reached: stream quarantined",
+                           stream=sid)
+
+    def _retry_gate(self, rung_name: str) -> bool:
+        """Burn through armed transient step faults with bounded
+        exponential backoff (virtual time when a clock is wired).  True
+        means the bucket may serve; False aborts it for this tick."""
+        res = self.resilience
+        for attempt in range(res.cfg.max_retries + 1):
+            if not res.take_step_fault():
+                if attempt:
+                    res.ledger.add(
+                        self.ticks, "retry",
+                        f"{rung_name} step served after {attempt} "
+                        f"retr{'y' if attempt == 1 else 'ies'}",
+                        value=float(attempt))
+                return True
+            backoff = res.cfg.backoff_base_s * (2 ** attempt)
+            if self.clock is not None:
+                self.clock.advance(backoff)
+            res.ledger.add(self.ticks, "retry",
+                           f"transient {rung_name} step fault: backing off "
+                           f"{backoff * 1e3:.1f}ms", value=backoff)
+        res.ledger.add(self.ticks, "abort",
+                       f"retries exhausted: {rung_name} bucket dropped "
+                       f"this tick", value=float(res.cfg.max_retries))
+        return False
+
+    def _watchdog(self, rows: list) -> None:
+        res = self.resilience
+        scale = res.cfg.watchdog_scale
+        for r in rows:
+            sid = r["stream"]
+            if r["latency_s"] > scale * r["budget_s"]:
+                res.ledger.add(
+                    self.ticks, "watchdog",
+                    f"latency {r['latency_s'] * 1e3:.2f}ms > "
+                    f"{scale:g}x budget {r['budget_s'] * 1e3:.2f}ms",
+                    stream=sid, value=r["latency_s"])
+                self._apply_fault_action(sid, res.note_fault(sid, self.ticks))
+            else:
+                healthy_after = res.note_clean(sid, self.ticks)
+                if healthy_after is not None:
+                    res.ledger.add(
+                        self.ticks, "recover",
+                        f"healthy after {healthy_after} ticks degraded",
+                        stream=sid, value=float(healthy_after))
 
     def _rebalance_shards(self, buckets: Dict[str, list]) -> None:
         """One placer-driven migration per skewed rung engine (lowest

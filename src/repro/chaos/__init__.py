@@ -1,0 +1,39 @@
+"""tvchaos — deterministic fault injection and graceful degradation.
+
+The paper's worst inference-time variations are rare disruptive events:
+contention spikes, sensor stalls, device anomalies.  This package makes
+them injectable (seeded, virtual-time, byte-reproducible) and makes the
+fleet survive them:
+
+* :mod:`~repro.chaos.plan` — declarative :class:`ChaosSpec` compiled
+  into a concrete tick-indexed :class:`FaultPlan` (all randomness at
+  compile time).
+* :mod:`~repro.chaos.inject` — :class:`FaultInjector`, the pure-lookup
+  runtime driver (shard kills, stalls, corrupt frames, step faults,
+  latency spikes).
+* :mod:`~repro.chaos.recovery` — :class:`FleetResilience`: per-stream
+  hysteretic health machines and transient-fault retry bookkeeping.
+* :mod:`~repro.chaos.ledger` — :class:`ChaosLedger`, the fault/recovery
+  event log with observability fan-out.
+* :mod:`~repro.chaos.catalog` — named chaos episodes
+  (``shard_loss_rush_hour``, ``sensor_stall_storm``) and
+  :func:`run_chaos_episode`.
+
+CLI: ``python -m repro.chaos --episode shard_loss_rush_hour --check``.
+"""
+from .catalog import (CHAOS_CATALOG, ChaosEpisode, chaos_episode_names,
+                      get_chaos_episode, run_chaos_episode)
+from .inject import FaultInjector, corrupt_frame
+from .ledger import ChaosLedger, LedgerEvent
+from .plan import (KINDS, ChaosSpec, FaultClause, FaultEvent, FaultPlan,
+                   compile_plan)
+from .recovery import (DEGRADED, HEALTHY, QUARANTINED, FleetResilience,
+                       ResilienceConfig, StreamHealth)
+
+__all__ = [
+    "KINDS", "FaultClause", "ChaosSpec", "FaultEvent", "FaultPlan",
+    "compile_plan", "FaultInjector", "corrupt_frame", "ChaosLedger",
+    "LedgerEvent", "ResilienceConfig", "StreamHealth", "FleetResilience",
+    "HEALTHY", "DEGRADED", "QUARANTINED", "ChaosEpisode", "CHAOS_CATALOG",
+    "get_chaos_episode", "chaos_episode_names", "run_chaos_episode",
+]

@@ -1,0 +1,132 @@
+"""Chaos episode runner / smoke gate.
+
+::
+
+    PYTHONPATH=src python -m repro.chaos --episode sensor_stall_storm --check
+    PYTHONPATH=src python -m repro.chaos --episode shard_loss_rush_hour \\
+        --mesh data=2 --check --json-out chaos.json
+
+``--check`` replays under a zero-compile ``TraceSentinel`` and asserts
+the recovery gates: every killed-shard stream re-seated within
+``--reseat-bound`` ticks with a populated failover ledger (shard-loss
+episodes), at least one completed recovery within ``--recovery-bound``
+ticks (fault episodes that degrade streams), and every rung engine still
+at exactly one trace after the whole episode."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+from .catalog import chaos_episode_names, get_chaos_episode, run_chaos_episode
+
+__all__ = ["main"]
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.chaos",
+        description="Replay a chaos episode deterministically.")
+    ap.add_argument("--episode", required=True,
+                    choices=chaos_episode_names())
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec, e.g. data=2 (required when the "
+                         "episode wants more than one shard)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the episode's seed")
+    ap.add_argument("--tick-scale", type=float, default=None,
+                    help="stretch/shrink the base trace")
+    ap.add_argument("--json-out", default=None,
+                    help="write the report + gate outcomes here")
+    ap.add_argument("--check", action="store_true",
+                    help="zero-compile sentinel + recovery gates; exit 1 "
+                         "on violation")
+    ap.add_argument("--reseat-bound", type=int, default=3,
+                    help="max ticks from shard kill to last failover")
+    ap.add_argument("--recovery-bound", type=int, default=20,
+                    help="max ticks-to-healthy for any recovery")
+    args = ap.parse_args(argv)
+
+    ep = get_chaos_episode(args.episode)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh, parse_mesh_spec
+        mesh = make_local_mesh(**parse_mesh_spec(args.mesh))
+    elif ep.mesh_data > 1:
+        ap.error(f"episode {ep.name!r} wants {ep.mesh_data} data shards: "
+                 f"pass --mesh data={ep.mesh_data} (and force host devices "
+                 f"with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+    sentinel = None
+    if args.check:
+        from repro.analysis.sentinel import TraceSentinel
+        sentinel = TraceSentinel(compile_budget=0)
+
+    report, replayer, plan = run_chaos_episode(
+        args.episode, mesh=mesh, sentinel=sentinel, seed=args.seed,
+        tick_scale=args.tick_scale)
+    ledger = replayer.injector.ledger
+    trace_counts = {name: eng.trace_count
+                    for name, eng in replayer.scheduler.engines.items()}
+
+    problems: list = []
+    reseat = ledger.reseat_ticks()
+    if plan.kills:
+        if not ledger.failovers():
+            problems.append("shard was killed but the failover ledger is "
+                            "empty")
+        elif reseat > args.reseat_bound:
+            problems.append(f"worst reseat took {reseat} ticks "
+                            f"(bound {args.reseat_bound})")
+    recovery = ledger.recovery_times()
+    if any(ev.kind == "degrade" for ev in ledger.events):
+        if not recovery:
+            problems.append("streams were degraded but none recovered to "
+                            "healthy before the episode ended")
+        elif max(recovery) > args.recovery_bound:
+            problems.append(f"slowest recovery took {max(recovery):g} ticks "
+                            f"(bound {args.recovery_bound})")
+    bad_traces = {n: c for n, c in trace_counts.items() if c != 1}
+    if bad_traces:
+        problems.append(f"engines retraced during the episode: {bad_traces}")
+
+    doc = {
+        "episode": args.episode,
+        "base": ep.base,
+        "seed": args.seed if args.seed is not None else ep.seed,
+        "mesh": args.mesh,
+        "n_shards": replayer.scheduler.n_shards,
+        "n_faults": len(plan.events),
+        "trace_counts": trace_counts,
+        "ledger_counts": ledger.counts(),
+        "reseat_ticks": reseat,
+        "recovery_ticks": recovery,
+        "gates": {"checked": bool(args.check), "problems": problems},
+        "report": report.to_dict(),
+    }
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True, allow_nan=False)
+            f.write("\n")
+
+    totals = report.totals()
+    print(f"[chaos] {args.episode}: {totals['frames']} frames, "
+          f"{totals['drops']} drops, {len(plan.events)} fault events, "
+          f"ledger {ledger.counts()}")
+    if reseat is not None:
+        print(f"[chaos] worst reseat: {reseat} tick(s)")
+    if recovery:
+        print(f"[chaos] recoveries: {len(recovery)} "
+              f"(slowest {max(recovery):g} ticks)")
+    if args.check:
+        if problems:
+            for p in problems:
+                print(f"[chaos] GATE FAILED: {p}")
+            return 1
+        print("[chaos] all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -203,6 +203,34 @@ def serve_fleet(args) -> None:
     for sid in sids:
         sched.add_stream(sid, budget_s)
 
+    injector = ledger = None
+    if args.chaos:
+        import os
+
+        from repro.chaos import (
+            ChaosLedger,
+            FaultInjector,
+            FaultPlan,
+            FleetResilience,
+            compile_plan,
+            get_chaos_episode,
+        )
+        if os.path.exists(args.chaos):
+            plan = FaultPlan.load(args.chaos)
+        else:
+            try:
+                ep = get_chaos_episode(args.chaos)
+            except KeyError:
+                raise SystemExit(
+                    f"--chaos: {args.chaos!r} is neither a FaultPlan JSON "
+                    f"file nor a known chaos episode")
+            plan = compile_plan(ep.spec, sids, args.ticks, seed=ep.seed)
+        ledger = ChaosLedger(obs=obs)
+        injector = FaultInjector(plan, ledger=ledger)
+        sched.attach_resilience(FleetResilience(ledger=ledger))
+        print(f"chaos: plan {plan.name!r} armed "
+              f"({len(plan.events)} fault event(s) over {plan.n_ticks} ticks)")
+
     rng = np.random.default_rng(0)
     frames = 0
     t_wall = _time.perf_counter()
@@ -212,6 +240,10 @@ def serve_fleet(args) -> None:
                 SceneConfig(scenario="city", rain_mm_per_hour=float(
                     rng.choice([0.0, 0.0, 4.0])), seed=i), t)
             for i, sid in enumerate(sids)}
+        if injector is not None:
+            cost.contention = injector.latency_scale(t)
+            injector.pre_tick(t, sched)
+            scenes = injector.filter_scenes(t, scenes)
         res = sched.tick(scenes)
         frames += len(res.outputs)
     wall_s = _time.perf_counter() - t_wall
@@ -235,10 +267,16 @@ def serve_fleet(args) -> None:
         "shard_occupancy": occupancy,
         "report": sched.report(),
     }
+    if ledger is not None:
+        doc["chaos"] = ledger.to_dict()
     print(f"fleet: {args.streams} streams x {args.ticks} ticks on "
           f"{n_shards} shard(s) ({jax.device_count()} device(s)): "
           f"{frames} frames in {virtual_s*1e3:.1f}ms virtual "
           f"({doc['frames_per_vs']:.1f} frames/s), wall {wall_s:.2f}s")
+    if ledger is not None:
+        counts = ledger.counts()
+        print("chaos ledger: " + (" ".join(
+            f"{k}={v}" for k, v in counts.items()) or "no events"))
     for name, occ in occupancy.items():
         print(f"  {name}: shard occupancy {occ} (traces={traces[name]})")
     if args.json_out:
@@ -277,6 +315,11 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="fleet mode: write the machine-readable run "
                          "report (the benchmarks/fleet.py channel) here")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="fleet mode: inject faults from PLAN — a FaultPlan "
+                         "JSON file (repro.chaos) or a chaos-episode name "
+                         "(e.g. sensor_stall_storm); arms the watchdog/"
+                         "failover resilience machinery")
     ap.add_argument("--arrival-rate", type=float, default=100.0,
                     help="multi-tenant Poisson arrival rate (streams/s, simulated)")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -318,6 +361,8 @@ def main() -> None:
         ap.error("--mesh only applies to --fleet")
     if args.json_out is not None:
         ap.error("--json-out only applies to --fleet")
+    if args.chaos is not None:
+        ap.error("--chaos only applies to --fleet")
     if args.arch is None:
         ap.error("--arch is required (unless --fleet)")
 

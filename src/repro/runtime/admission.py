@@ -71,9 +71,13 @@ class AdmissionController:
         self.admitted = 0
         self.deferred = 0          # unique requests deferred at least once
         self.shed = 0
-        # in-flight deferred requests by object identity (a deferred request
-        # is alive in the queue, so its id is stable); entries are removed
-        # on the final admit/shed decision, bounding the set
+        # in-flight deferred requests by admission token.  Object identity
+        # (``id(req)``) is NOT safe here: once a deferred request is
+        # garbage-collected its id can be recycled by a brand-new request,
+        # which would then silently skip its own deferred count.  The
+        # monotone ``StreamRequest.admission_token`` is never reused.
+        # Entries are removed on the final admit/shed decision, bounding
+        # the set.
         self._deferred_inflight: set[int] = set()
 
     # ---------------- latency model ----------------
@@ -114,7 +118,7 @@ class AdmissionController:
         if tail_joined <= req.deadline_s:
             if record:
                 self.admitted += 1
-                self._deferred_inflight.discard(id(req))
+                self._deferred_inflight.discard(req.admission_token)
             return AdmissionDecision(
                 ADMIT, pred_joined,
                 f"p{self.confidence*100:.0f} step {tail_joined*1e3:.2f}ms "
@@ -123,7 +127,7 @@ class AdmissionController:
         if waited > self.max_wait_s:
             if record:
                 self.shed += 1
-                self._deferred_inflight.discard(id(req))
+                self._deferred_inflight.discard(req.admission_token)
             return AdmissionDecision(
                 SHED, pred_joined,
                 f"waited {waited:.3f}s > max_wait {self.max_wait_s:.3f}s",
@@ -132,7 +136,7 @@ class AdmissionController:
         if tail_solo > req.deadline_s:
             if record:
                 self.shed += 1
-                self._deferred_inflight.discard(id(req))
+                self._deferred_inflight.discard(req.admission_token)
             return AdmissionDecision(
                 SHED, pred_joined,
                 f"SLO {req.deadline_s*1e3:.2f}ms unachievable: solo "
@@ -140,8 +144,8 @@ class AdmissionController:
             )
         # a head-of-line request is re-decided every drain iteration while
         # it waits: count it once, like admitted/shed per-request counters
-        if record and id(req) not in self._deferred_inflight:
-            self._deferred_inflight.add(id(req))
+        if record and req.admission_token not in self._deferred_inflight:
+            self._deferred_inflight.add(req.admission_token)
             self.deferred += 1
         return AdmissionDecision(
             DEFER, pred_joined,
@@ -166,8 +170,10 @@ class AnytimeAdmission:
         self.inner = inner
         self.degraded = 0              # streams rescued from a shed
         self.degrade_log: list[tuple[str, float]] = []   # (tenant, factor)
-        # requests counted as deferred via a degraded probe (by identity;
-        # a deferred request stays alive in the queue so its id is stable)
+        # requests counted as deferred via a degraded probe, keyed by the
+        # monotone admission token (identity-by-id would alias recycled
+        # ids; the token also survives dataclasses.replace, so the
+        # degraded clone stays the same logical request)
         self._rescued_defer: set[int] = set()
 
     # latency model passthrough -------------------------------------------
@@ -193,7 +199,7 @@ class AnytimeAdmission:
     def decide(
         self, req: StreamRequest, n_active: int, now: float
     ) -> AdmissionDecision:
-        rid = id(req)
+        rid = req.admission_token
         if rid in self._rescued_defer:
             # already counted as deferred through a degraded probe; seed the
             # inner inflight set so a genuine defer doesn't double-count

@@ -10,12 +10,20 @@ controller either seats them in a free slot, defers them, or sheds them.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
 __all__ = ["StreamRequest", "RequestQueue", "poisson_workload"]
+
+# process-wide monotone admission-token source: every StreamRequest gets
+# a unique integer at construction.  Unlike ``id(req)``, a token is never
+# recycled when a request is garbage-collected, so the admission
+# controller's deferred-request tracking cannot silently confuse a new
+# request with a dead one.
+_ADMISSION_TOKENS = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +44,13 @@ class StreamRequest:
     # anytime service ladder: SLO relaxation factors tried (in order) before
     # the request is shed — degraded service beats no service
     degrade_factors: tuple[float, ...] = ()
+    # identity of the *logical* request across defer/re-decide cycles.
+    # ``dataclasses.replace`` copies it, so a degraded-SLO clone built by
+    # AnytimeAdmission is still the same request to the controller's
+    # per-request counters.  Excluded from comparisons: two requests with
+    # identical payloads are still distinct admissions.
+    admission_token: int = dataclasses.field(
+        default_factory=lambda: next(_ADMISSION_TOKENS), compare=False)
 
     def __post_init__(self) -> None:
         p = np.asarray(self.prompt, np.int32)

@@ -217,6 +217,11 @@ class VariationReport:
     n_ticks: int
     clock_s: float
     segments: list[SegmentReport]
+    # fault/recovery ledger dict when a chaos plan actually fired during
+    # the replay; None (and absent from the JSON) otherwise — so a
+    # fault-free run with chaos machinery attached serializes
+    # byte-identically to a plain run (the golden suite asserts this)
+    chaos: Optional[dict] = None
 
     def totals(self) -> dict:
         frames = sum(s.frames for s in self.segments)
@@ -237,7 +242,7 @@ class VariationReport:
         }
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "episode": self.episode,
             "seed": self.seed,
             "n_ticks": self.n_ticks,
@@ -245,6 +250,9 @@ class VariationReport:
             "totals": self.totals(),
             "segments": [s.to_dict() for s in self.segments],
         }
+        if self.chaos:
+            d["chaos"] = self.chaos
+        return d
 
     def to_json(self, indent: int | None = None) -> str:
         return json.dumps(self.to_dict(), sort_keys=True, indent=indent,
@@ -286,6 +294,7 @@ class ScenarioReplayer:
         depth: int = 1,
         obs=None,
         mesh=None,
+        chaos=None,
     ) -> None:
         if depth < 1:
             raise ValueError(f"depth must be >= 1 (got {depth})")
@@ -349,6 +358,24 @@ class ScenarioReplayer:
             obs.bind_clock(self.clock)
             for rung_name, eng in scheduler.engines.items():
                 eng.obs_tag = f"{trace.name}/{rung_name}"
+        # chaos: ``chaos=`` takes a compiled ``repro.chaos.FaultPlan``.
+        # Attaching one wires the injector (pure plan lookups) and the
+        # scheduler's resilience layer (health machines, watchdog, retry)
+        # into the replay.  All fault randomness was spent at plan compile
+        # time, so an empty plan makes this attachment pure observation —
+        # the golden byte-identity tests pin that down.  Imports are lazy:
+        # repro.chaos.catalog builds replayers, so a module-level import
+        # here would be circular.
+        self.injector = None
+        self.resilience = None
+        if chaos is not None:
+            from repro.chaos.inject import FaultInjector
+            from repro.chaos.ledger import ChaosLedger
+            from repro.chaos.recovery import FleetResilience
+            ledger = ChaosLedger(obs=obs)
+            self.resilience = FleetResilience(ledger=ledger)
+            self.injector = FaultInjector(chaos, ledger=ledger)
+            scheduler.attach_resilience(self.resilience)
 
     def run(self, sentinel=None) -> VariationReport:
         """Replay the episode.  ``sentinel`` (a
@@ -375,9 +402,12 @@ class ScenarioReplayer:
         guard = sentinel if sentinel is not None else contextlib.nullcontext()
         with guard:
             reports = self._run_segments(tr, sched, rng)
-        return VariationReport(
+        report = VariationReport(
             episode=tr.name, seed=tr.seed, n_ticks=tr.n_ticks,
             clock_s=self.clock.time(), segments=reports)
+        if self.injector is not None and len(self.injector.ledger):
+            report.chaos = self.injector.ledger.to_dict()
+        return report
 
     def _run_segments(self, tr, sched, rng) -> list[SegmentReport]:
         reports: list[SegmentReport] = []
@@ -391,9 +421,18 @@ class ScenarioReplayer:
             sync = ApproxTimeSynchronizer(
                 active, queue_size=self.fusion_queue, slop=0.45 * tr.period_s)
             rows: list[dict] = []
-            drops = {sid: 0 for sid in active}
+            # lazily keyed: seeding from segment-start ``active`` would
+            # KeyError on churn edge cases (a stream seated after the
+            # snapshot, e.g. leave+rejoin inside one segment) and silently
+            # pins accounting to a stale membership view
+            drops: dict[str, int] = {}
             for k in range(seg.n_ticks):
                 self.cost.contention = seg.contention_at(k)
+                if self.injector is not None:
+                    # adversarial latency spike: compounds with the
+                    # trace's own contention profile
+                    self.cost.contention *= self.injector.latency_scale(
+                        tick_idx)
                 rain = seg.rain_at(k)
                 budget = tr.budget_s * seg.budget_scale_at(k)
                 t0 = self.clock.time()
@@ -401,7 +440,7 @@ class ScenarioReplayer:
                 stamps = {}
                 for sid in active:
                     if rng.random() < seg.dropout_for(sid):
-                        drops[sid] += 1
+                        drops[sid] = drops.get(sid, 0) + 1
                         continue
                     cfg = SceneConfig(
                         scenario=draw_scenario(rng, seg.scenario_mix),
@@ -414,6 +453,13 @@ class ScenarioReplayer:
                     # slop matching is exercised and delays (arrival −
                     # stamp) stay physically non-negative
                     stamps[sid] = t0 - 0.25 * tr.period_s * rng.random()
+                if self.injector is not None:
+                    # infrastructure faults first (shard kills/revives,
+                    # armed step failures), then sensor faults — AFTER
+                    # scene generation, so the dropout/scenario RNG
+                    # consumes draws in exactly the fault-free order
+                    self.injector.pre_tick(tick_idx, sched)
+                    scenes = self.injector.filter_scenes(tick_idx, scenes)
                 # tick even when every stream dropped: the scheduler's
                 # per-stream dropout accounting must see the empty tick
                 res = sched.tick(
@@ -467,7 +513,7 @@ class ScenarioReplayer:
             misses = sum(int(r["miss"]) for r in mine)
             p50, p99, cv = stats(lats)
             per_stream[sid] = StreamSegmentStats(
-                frames=len(mine), drops=drops[sid], misses=misses,
+                frames=len(mine), drops=drops.get(sid, 0), misses=misses,
                 p50_ms=p50, p99_ms=p99, cv=cv,
                 mean_quality=float(np.mean(quals)) if quals else None,
                 rungs=rungs)

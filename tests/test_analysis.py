@@ -324,6 +324,84 @@ def test_tv006_silent_when_fenced():
     assert "TV006" not in _rules(src)
 
 
+# ------------------------------------------------------------- TV008 --
+
+def test_tv008_flags_bare_except_pass_in_hot_function():
+    src = """
+        def tick(engine, frames):
+            try:
+                engine.step(frames)
+            except:
+                pass
+    """
+    assert "TV008" in _rules(src)
+
+
+def test_tv008_flags_broad_except_continue_in_loop():
+    src = """
+        def drain(queue):
+            for item in queue:
+                try:
+                    item.process()
+                except Exception:
+                    continue
+    """
+    assert "TV008" in _rules(src)
+
+
+def test_tv008_flags_unbounded_while_true_retry():
+    src = """
+        def submit(req, backend):
+            while True:
+                try:
+                    backend.send(req)
+                    break
+                except IOError:
+                    continue
+    """
+    assert "TV008" in _rules(src)
+
+
+def test_tv008_silent_outside_hot_context():
+    # the same swallow, but in a cold setup function: not a per-tick
+    # hazard, the rule stays quiet
+    src = """
+        def load_config(path):
+            try:
+                return open(path).read()
+            except Exception:
+                pass
+    """
+    assert "TV008" not in _rules(src)
+
+
+def test_tv008_silent_on_bounded_retry_and_surfacing_handlers():
+    src = """
+        def step(engine, frames, log):
+            # bounded retry: the for loop caps attempts
+            for attempt in range(3):
+                try:
+                    return engine.run(frames)
+                except IOError:
+                    log.warn("retry %d", attempt)
+            # specific exception with a fallback that surfaces the fault
+            try:
+                return engine.run(frames)
+            except IOError as e:
+                log.error(e)
+                raise
+
+        def drain(queue):
+            # while True bounded by a re-raising handler
+            while True:
+                try:
+                    return queue.pop()
+                except IndexError:
+                    raise RuntimeError("drained empty queue")
+    """
+    assert "TV008" not in _rules(src)
+
+
 # ------------------------------------------------- finding metadata ---
 
 def test_findings_carry_location_axis_and_hint():
@@ -347,7 +425,7 @@ def test_findings_carry_location_axis_and_hint():
 def test_every_rule_maps_to_a_paper_axis():
     from repro.analysis import AXES
     assert {r.axis for r in RULES.values()} == set(AXES)
-    assert sorted(RULES) == [f"TV00{i}" for i in range(1, 8)]
+    assert sorted(RULES) == [f"TV00{i}" for i in range(1, 9)]
 
 
 # ------------------------------------------------- suppressions -------

@@ -1,0 +1,155 @@
+"""Property tests for the chaos plan compiler and health machine.
+
+Invariants the chaos subsystem's determinism rests on:
+
+* **compile determinism** — the same (spec, streams, n_ticks, seed)
+  always compiles to a byte-identical ``FaultPlan``, and every compiled
+  event lands inside the horizon and targets a known stream;
+* **serialization closure** — ``from_json(to_json(plan))`` is the
+  identity on the serialized form;
+* **health-machine safety** — under any fault/clean/age sequence a
+  stream only reaches ``quarantined`` after at least
+  ``quarantine_faults`` faults, and ``recover`` is only ever reported
+  from the degraded state with a non-negative ticks-to-healthy.
+
+The container has no ``hypothesis``, so the always-on tests drive a
+seeded random spec generator; equivalent hypothesis variants run
+wherever the package exists (gated, never required)."""
+import random
+
+import pytest
+
+from repro.chaos import (
+    KINDS,
+    ChaosSpec,
+    FaultClause,
+    FaultPlan,
+    FleetResilience,
+    ResilienceConfig,
+    compile_plan,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_STREAMS = ("cam_front", "cam_left", "cam_right", "cam_rear")
+
+
+def _random_clause(rng: random.Random) -> FaultClause:
+    kind = rng.choice(KINDS)
+    kw = dict(kind=kind, at=rng.randrange(0, 20),
+              duration=rng.randrange(1, 8),
+              probability=rng.choice((1.0, 0.7, 0.4)))
+    if kind == "shard_loss":
+        kw["shard"] = rng.randrange(0, 4)
+        kw["probability"] = 1.0
+        if rng.random() < 0.3:
+            kw["duration"] = 0              # permanent loss
+    elif kind in ("sensor_stall", "nan_frame"):
+        kw["streams"] = tuple(sorted(rng.sample(_STREAMS,
+                                                rng.randrange(1, 4)))) \
+            if rng.random() < 0.7 else ("*",)
+    elif kind == "latency_spike":
+        kw["scale"] = rng.choice((1.5, 3.0, 8.0))
+    elif kind == "step_fault":
+        kw["count"] = rng.randrange(1, 4)
+    return FaultClause(**kw)
+
+
+def _random_spec(rng: random.Random) -> ChaosSpec:
+    return ChaosSpec(
+        name=f"spec-{rng.randrange(1 << 16)}", description="generated",
+        clauses=tuple(_random_clause(rng)
+                      for _ in range(rng.randrange(1, 6))))
+
+
+def _check_plan_invariants(spec: ChaosSpec, n_ticks: int, seed: int) -> None:
+    a = compile_plan(spec, _STREAMS, n_ticks, seed)
+    b = compile_plan(spec, _STREAMS, n_ticks, seed)
+    assert a.to_json() == b.to_json()
+    assert FaultPlan.from_json(a.to_json()).to_json() == a.to_json()
+    for e in a.events:
+        assert 0 <= e.tick < n_ticks
+        if e.kind in ("stall", "nan_frame"):
+            assert e.stream in _STREAMS
+    # events are stored in canonical sorted order, so equal content
+    # implies equal bytes regardless of clause declaration order
+    assert a.events == sorted(
+        a.events, key=lambda e: (e.tick, e.kind, e.stream, e.shard))
+
+
+def _check_health_invariants(cfg: ResilienceConfig, ops) -> None:
+    res = FleetResilience(cfg)
+    sid = "cam_front"
+    faults = 0
+    for tick, op in enumerate(ops):
+        if op == 0:
+            action = res.note_fault(sid, tick)
+            faults += 1
+            assert action in ("degrade", "quarantine")
+            if action == "quarantine":
+                assert faults >= cfg.quarantine_faults
+        elif op == 1:
+            before = res.state(sid)
+            healthy_after = res.note_clean(sid, tick)
+            if healthy_after is not None:
+                assert before == "degraded"
+                assert healthy_after >= 0
+                faults = 0
+        else:
+            res.age_quarantine(tick)
+        assert res.state(sid) in ("healthy", "degraded", "quarantined")
+
+
+# ----------------------------------------------- seeded, always on -----
+
+def test_compile_plan_invariants_seeded():
+    for trial in range(40):
+        rng = random.Random(1000 + trial)
+        _check_plan_invariants(_random_spec(rng),
+                               n_ticks=rng.randrange(1, 40),
+                               seed=rng.randrange(1 << 20))
+
+
+def test_health_machine_invariants_seeded():
+    for trial in range(40):
+        rng = random.Random(2000 + trial)
+        cfg = ResilienceConfig(
+            quarantine_faults=rng.randrange(1, 5),
+            probation_ticks=rng.randrange(1, 4),
+            recover_ticks=rng.randrange(1, 4))
+        ops = [rng.randrange(3) for _ in range(60)]
+        _check_health_invariants(cfg, ops)
+
+
+# ----------------------------------------------- hypothesis, gated -----
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def specs(draw):
+        rng = random.Random(draw(st.integers(0, 2**30)))
+        return _random_spec(rng)
+
+    @given(specs(), st.integers(1, 40), st.integers(0, 2**20))
+    @settings(max_examples=50, deadline=None)
+    def test_compile_plan_invariants(spec, n_ticks, seed):
+        _check_plan_invariants(spec, n_ticks, seed)
+
+    @given(st.integers(1, 5), st.integers(1, 4), st.integers(1, 4),
+           st.lists(st.integers(0, 2), max_size=80))
+    @settings(max_examples=50, deadline=None)
+    def test_health_machine_invariants(qf, pt, rt, ops):
+        _check_health_invariants(
+            ResilienceConfig(quarantine_faults=qf, probation_ticks=pt,
+                             recover_ticks=rt), ops)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed in this container")
+    def test_hypothesis_variants_unavailable():
+        pass
